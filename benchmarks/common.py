@@ -1,0 +1,50 @@
+"""Shared benchmark helpers: timing, synthetic tensors, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
+    """Best-of-reps wall time in seconds (post-warmup, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def lowrank_tensor(dims, ranks, seed=0, noise=0.01, dtype=jnp.float32):
+    """Random tensor with known multilinear structure + relative noise.
+
+    ``noise`` is the per-element noise std as a fraction of the signal's
+    per-element RMS, so the achievable relative reconstruction error at the
+    true ranks is ≈ noise regardless of shape."""
+    from repro.core import tensor_ops as T
+    rng = np.random.default_rng(seed)
+    core = rng.standard_normal(ranks)
+    us = [np.linalg.qr(rng.standard_normal((d, r)))[0]
+          for d, r in zip(dims, ranks)]
+    x = T.reconstruct(jnp.asarray(core, dtype), [jnp.asarray(u, dtype) for u in us])
+    if noise:
+        rms = float(jnp.sqrt(jnp.mean(x.astype(jnp.float32) ** 2)))
+        x = x + noise * rms * jnp.asarray(rng.standard_normal(dims), dtype)
+    return x
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def scaled(dims, truncs, factor: float):
+    d = tuple(max(4, int(round(x * factor))) for x in dims)
+    t = tuple(max(2, min(di, int(round(ti * factor)))) for di, ti in zip(d, truncs))
+    return d, t

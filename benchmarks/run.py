@@ -1,0 +1,48 @@
+"""Benchmark harness: one function per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale dims."""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dims (hours on 1 CPU core)")
+    ap.add_argument("--only", default=None, help="comma-list of bench names")
+    args = ap.parse_args()
+
+    from . import paper_figs as pf
+    from . import system_bench as sb
+
+    benches = {
+        "fig2": lambda: pf.fig2_solver_variants(full=args.full),
+        "table3": lambda: pf.table3_realworld(full=args.full),
+        "fig5": lambda: pf.fig5_adaptive_speedup(),
+        "fig6": lambda: pf.fig6_modewise_trace(),
+        "fig7": lambda: pf.fig7_selector_overhead(),
+        "fig8": lambda: pf.fig8_matfree(full=args.full),
+        "selector": lambda: pf.selector_accuracy(),
+        "kernels": sb.kernels_bench,
+        "grad_compress": sb.grad_compress_bench,
+        "tiny_train": sb.tiny_train_bench,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

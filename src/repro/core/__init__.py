@@ -1,0 +1,28 @@
+"""a-Tucker core: input-adaptive, matricization-free Tucker decomposition.
+
+Public API:
+  sthosvd / sthosvd_eig / sthosvd_als / sthosvd_svd — flexible st-HOSVD
+  TuckerTensor — decomposition result (reconstruct, rel_error, ratio)
+  Selector / default_selector / train_and_save — adaptive solver selector
+  tensor_ops — matricization-free TTM/TTT/Gram (+ explicit baselines)
+"""
+
+from . import cost_model, tensor_ops, variants
+from .selector import Selector, default_selector, extract_features
+from .solvers import ALS, EIG, SVD, als_solve, eig_solve, svd_solve
+from .sthosvd import (
+    SthosvdResult,
+    TuckerTensor,
+    sthosvd,
+    sthosvd_als,
+    sthosvd_eig,
+    sthosvd_svd,
+)
+
+__all__ = [
+    "ALS", "EIG", "SVD",
+    "Selector", "SthosvdResult", "TuckerTensor",
+    "als_solve", "cost_model", "default_selector", "eig_solve",
+    "extract_features", "sthosvd", "sthosvd_als", "sthosvd_eig",
+    "sthosvd_svd", "svd_solve", "tensor_ops", "variants",
+]

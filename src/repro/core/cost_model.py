@@ -1,0 +1,50 @@
+"""FLOP cost model for the flexible st-HOSVD solvers (a-Tucker Eq. 4/5).
+
+Used (a) as the analytic fallback of the adaptive selector when no trained
+decision tree is available for the current platform, and (b) to derive the
+Table-I features.  LAPACK-kernel constants follow standard operation counts
+(Golub & Van Loan); the paper leaves f_eig/f_qr/f_inv symbolic.
+"""
+
+from __future__ import annotations
+
+from .solvers import DEFAULT_ALS_ITERS
+
+
+def f_eig(n: int) -> float:
+    """Symmetric eigendecomposition (tridiagonalization + QL): ~9n^3."""
+    return 9.0 * n ** 3
+
+
+def f_qr(m: int, n: int) -> float:
+    """Householder QR of an m×n (m ≥ n) matrix: 2mn² − (2/3)n³."""
+    return 2.0 * m * n * n - (2.0 / 3.0) * n ** 3
+
+
+def f_inv(n: int) -> float:
+    """Inverse of an n×n SPD matrix (Cholesky + triangular solves): 2n³."""
+    return 2.0 * n ** 3
+
+
+def eig_flops(i_n: int, r_n: int, j_n: int) -> float:
+    """Eq. (4): Gram (I_n² J_n) + TTM (2 I_n R_n J_n) + eig."""
+    return float(i_n) * i_n * j_n + 2.0 * i_n * r_n * j_n + f_eig(i_n)
+
+
+def als_flops(i_n: int, r_n: int, j_n: int,
+              num_iters: int = DEFAULT_ALS_ITERS) -> float:
+    """Eq. (5): per-iteration 2 TTM + 2 TTT + 2 GEMM + 2 inversions, plus the
+    closing TTM and QR."""
+    per_iter = (
+        2.0 * i_n * j_n * r_n + 2.0 * j_n * r_n * r_n     # R-update TTM + scale
+        + 2.0 * i_n * j_n * r_n + 2.0 * j_n * r_n * r_n   # L-update TTT + scale
+        + 4.0 * i_n * r_n * r_n                           # GEMMs with inverses
+        + 2.0 * f_inv(r_n)
+    )
+    return per_iter * num_iters + 2.0 * j_n * r_n * r_n + f_qr(i_n, r_n)
+
+
+def predicted_best(i_n: int, r_n: int, j_n: int,
+                   num_iters: int = DEFAULT_ALS_ITERS) -> str:
+    """Analytic solver choice: smaller modeled FLOP count wins."""
+    return "eig" if eig_flops(i_n, r_n, j_n) <= als_flops(i_n, r_n, j_n, num_iters) else "als"

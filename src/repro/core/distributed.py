@@ -1,0 +1,150 @@
+"""Distributed st-HOSVD for tensors sharded across a mesh (TuckerMPI pattern,
+JAX-native).
+
+Decomposition of a tensor sharded along one mode over a mesh axis:
+
+  * Gram (mode n ≠ shard mode m): each device contracts its local slab —
+    the shard axis lives inside the merged contraction dims — giving a
+    *partial* I_n×I_n Gram; one ``psum`` over the shard axis completes it.
+    (Explicit ``shard_map`` so the collective schedule is visible.)
+  * eigh on the replicated small Gram runs redundantly on every device
+    (standard practice; I_n×I_n is tiny next to the tensor).
+  * TTM (mode n ≠ m): embarrassingly local; output stays sharded on m.
+  * Before processing the currently-sharded mode the tensor is resharded to
+    the largest *remaining* mode (one all-to-all, amortized by the shrink).
+
+The ALS path runs under GSPMD (jit + shardings) — its inner TTM/TTT chain
+contracts sharded dims, and XLA inserts the same psum pattern automatically;
+we keep it as the reference for the manual schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import tensor_ops as T
+from .solvers import DEFAULT_ALS_ITERS
+from .sthosvd import SthosvdResult, ModeTrace, TuckerTensor
+
+
+def _spec_for(ndim: int, mode: int | None, axis: str) -> P:
+    parts = [None] * ndim
+    if mode is not None:
+        parts[mode] = axis
+    return P(*parts)
+
+
+def _shard(x: jax.Array, mesh: Mesh, mode: int | None, axis: str) -> jax.Array:
+    return jax.device_put(x, NamedSharding(mesh, _spec_for(x.ndim, mode, axis)))
+
+
+def _gram_psum(mesh: Mesh, axis: str, ndim: int, mode: int, shard_mode: int):
+    """shard_map'd partial-Gram + psum over the shard axis."""
+    @jax.jit
+    def run(x):
+        def body(xl):
+            s_local = T.gram(xl, mode)
+            return jax.lax.psum(s_local, axis)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=_spec_for(ndim, shard_mode, axis),
+            out_specs=P(),
+        )(x)
+    return run
+
+
+def _ttm_local(mesh: Mesh, axis: str, ndim: int, mode: int, shard_mode: int):
+    """shard_map'd local TTM (contraction mode fully local)."""
+    @jax.jit
+    def run(x, ut):
+        def body(xl, utl):
+            return T.ttm(xl, utl, mode)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(_spec_for(ndim, shard_mode, axis), P()),
+            out_specs=_spec_for(ndim, shard_mode, axis),
+        )(x, ut)
+    return run
+
+
+def pick_shard_mode(shape: tuple[int, ...], exclude: int, n_shards: int) -> int | None:
+    """Largest mode ≠ ``exclude`` divisible by the shard count; None → the
+    (shrunk) tensor no longer shards evenly and is cheap enough to replicate
+    — st-HOSVD's sequential shrinking makes the late modes tiny."""
+    order = sorted(range(len(shape)), key=lambda m: -shape[m])
+    for m in order:
+        if m != exclude and shape[m] % n_shards == 0:
+            return m
+    return None
+
+
+def sthosvd_distributed(
+    x: jax.Array,
+    ranks,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    methods: str = "eig",
+    als_iters: int = DEFAULT_ALS_ITERS,
+) -> SthosvdResult:
+    """Distributed flexible st-HOSVD.  ``methods``: 'eig' | 'als' | 'auto'.
+
+    'eig' runs the explicit shard_map schedule above.  'als'/'auto' route the
+    per-mode solve through GSPMD-sharded jit (collectives inserted by XLA);
+    'auto' consults the adaptive selector per mode exactly as the
+    single-device path does.
+    """
+    from .solvers import als_solve
+    from .selector import default_selector
+
+    n = x.ndim
+    ranks = tuple(int(r) for r in ranks)
+    n_shards = mesh.shape[axis]
+    selector = default_selector() if methods == "auto" else None
+
+    y = x
+    factors: list[jax.Array | None] = [None] * n
+    trace: list[ModeTrace] = []
+
+    for mode in range(n):
+        i_n, r_n = y.shape[mode], ranks[mode]
+        j_n = y.size // i_n
+        shard_mode = pick_shard_mode(y.shape, mode, n_shards)
+        y = _shard(y, mesh, shard_mode, axis)
+
+        if methods == "auto":
+            method = selector(i_n=i_n, r_n=r_n, j_n=j_n)
+        else:
+            method = methods
+
+        if shard_mode is None:
+            # replicated fallback: tensor already shrunk below shardability
+            from .solvers import SOLVERS
+            if method == "als":
+                res = SOLVERS["als"](y, mode, r_n, num_iters=als_iters)
+            else:
+                res = SOLVERS["eig"](y, mode, r_n)
+            u, y = res.u, res.y_new
+        elif method == "eig":
+            s = _gram_psum(mesh, axis, n, mode, shard_mode)(y)
+            _, vecs = jnp.linalg.eigh(s)
+            u = vecs[:, -r_n:][:, ::-1].astype(y.dtype)
+            y = _ttm_local(mesh, axis, n, mode, shard_mode)(y, u.T)
+        elif method == "als":
+            in_sh = NamedSharding(mesh, _spec_for(n, shard_mode, axis))
+            out_sh = (NamedSharding(mesh, P()),
+                      NamedSharding(mesh, _spec_for(n, shard_mode, axis)))
+            solve = jax.jit(
+                lambda yy: tuple(als_solve(yy, mode, r_n, num_iters=als_iters)),
+                in_shardings=in_sh, out_shardings=out_sh)
+            u, y = solve(y)
+        else:
+            raise ValueError(f"unknown distributed method {method!r}")
+
+        factors[mode] = u
+        trace.append(ModeTrace(mode, method, i_n, r_n, j_n, 0.0))
+
+    return SthosvdResult(TuckerTensor(core=y, factors=factors), trace=trace)

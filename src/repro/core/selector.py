@@ -1,0 +1,216 @@
+"""Adaptive solver selector (a-Tucker Sec. IV).
+
+Features (paper Table I), label = argmin(measured time of EIG vs ALS) on the
+current platform.  A trained :class:`repro.core.dtree.DecisionTree` is stored
+as JSON per platform; when absent, the analytic Eq.4/5 cost model is the
+fallback so the flexible algorithm never blocks on training data.
+
+The training harness (:func:`collect_samples` + :func:`train_selector`)
+mirrors the paper's pipeline: random third-order tensors, dims in a
+configurable range (paper: [10, 10000]; scaled down by default for this
+1-core box — see DESIGN.md §8), truncation in [max(1, 10), 0.5·I_n],
+70/30 train/test split, grid-search CV over max_depth and class weights.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from .cost_model import predicted_best
+from .dtree import DecisionTree, grid_search_cv
+
+FEATURE_NAMES = (
+    "I_n", "R_n", "J_n",
+    "I_n*I_n", "R_n*R_n", "I_n*R_n",
+    "R_n*R_n/I_n", "R_n*R_n/J_n", "I_n/J_n", "R_n/J_n",
+)
+
+_DEFAULT_MODEL_DIR = Path(os.environ.get(
+    "ATUCKER_MODEL_DIR", Path(__file__).resolve().parent / "models"))
+
+LABELS = ("eig", "als")   # class 0 = eig, class 1 = als
+
+
+def extract_features(i_n: int, r_n: int, j_n: int) -> np.ndarray:
+    """Paper Table I: 3 raw shape features + 7 derived."""
+    i_n, r_n, j_n = float(i_n), float(r_n), float(j_n)
+    return np.array([
+        i_n, r_n, j_n,
+        i_n * i_n, r_n * r_n, i_n * r_n,
+        r_n * r_n / i_n, r_n * r_n / j_n, i_n / j_n, r_n / j_n,
+    ])
+
+
+@dataclass
+class Selector:
+    """Callable solver selector: (i_n, r_n, j_n) → 'eig' | 'als'.
+
+    Guardrail: decision trees extrapolate badly; queries outside the trained
+    feature range (× margin) defer to the analytic Eq.4/5 cost model — the
+    paper's huge-mode regime (Air: I_n = 30648) must never be mispredicted
+    by a tree that was trained on smaller dims.
+    """
+    tree: DecisionTree | None = None
+    platform: str = "unknown"
+    trained_range: tuple | None = None   # ((min_i, min_r, min_j), (max_i, max_r, max_j))
+    range_margin: float = 2.0
+
+    def __call__(self, *, i_n: int, r_n: int, j_n: int) -> str:
+        if self.tree is None or self._out_of_range(i_n, r_n, j_n):
+            return predicted_best(i_n, r_n, j_n)
+        return LABELS[self.tree.predict_one(extract_features(i_n, r_n, j_n))]
+
+    def _out_of_range(self, i_n, r_n, j_n) -> bool:
+        if self.trained_range is None:
+            return False
+        lo, hi = self.trained_range
+        m = self.range_margin
+        for v, l, h in zip((i_n, r_n, j_n), lo, hi):
+            if v < l / m or v > h * m:
+                return True
+        return False
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"platform": self.platform, "tree": self.tree.to_dict(),
+             "trained_range": self.trained_range}))
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Selector":
+        d = json.loads(Path(path).read_text())
+        rng = d.get("trained_range")
+        if rng is not None:
+            rng = (tuple(rng[0]), tuple(rng[1]))
+        return cls(tree=DecisionTree.from_dict(d["tree"]),
+                   platform=d["platform"], trained_range=rng)
+
+
+def model_path(platform: str | None = None) -> Path:
+    import jax
+    platform = platform or jax.default_backend()
+    return _DEFAULT_MODEL_DIR / f"selector_{platform}.json"
+
+
+_DEFAULT: Selector | None = None
+
+
+def default_selector() -> Selector:
+    """Trained tree for this platform if present, else cost-model fallback."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        p = model_path()
+        _DEFAULT = Selector.load(p) if p.exists() else Selector()
+    return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Training pipeline (paper Sec. IV-B)
+# ---------------------------------------------------------------------------
+
+def _time_solver(y, mode, rank, method: str, reps: int = 2) -> float:
+    import jax
+    from .solvers import SOLVERS
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(SOLVERS[method](y, mode, rank))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def collect_samples(
+    n_tensors: int = 120,
+    dim_range: tuple[int, int] = (10, 192),
+    seed: int = 0,
+    order: int = 3,
+    dtype=np.float32,
+    verbose: bool = False,
+):
+    """Time EIG vs ALS per mode on random tensors → (features, labels, times).
+
+    One record per (tensor, mode), as in the paper ("the statistics of each
+    mode constitute a record").  Warm-up compile is excluded by timing the
+    best of ``reps`` runs after a throwaway call.
+    """
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+
+    def log_uniform(lo, hi):
+        return int(round(np.exp(rng.uniform(np.log(lo), np.log(hi)))))
+
+    feats, labels, times = [], [], []
+    for t in range(n_tensors):
+        # log-uniform dims/ranks: covers the asymmetric shapes (one huge mode,
+        # tiny others — the paper's Air-tensor regime) where the EIG/ALS
+        # crossover lives, even at scaled-down absolute sizes.
+        dims = tuple(log_uniform(dim_range[0], dim_range[1]) for _ in range(order))
+        ranks = tuple(log_uniform(max(1, min(4, d // 2)), max(2, d // 2))
+                      for d in dims)
+        x = jnp.asarray(rng.standard_normal(dims), dtype=dtype)
+        for mode in range(order):
+            i_n, r_n = dims[mode], ranks[mode]
+            j_n = int(np.prod(dims)) // i_n
+            # throwaway to exclude compile time, then measure
+            _time_solver(x, mode, r_n, "eig", reps=1)
+            _time_solver(x, mode, r_n, "als", reps=1)
+            te = _time_solver(x, mode, r_n, "eig")
+            ta = _time_solver(x, mode, r_n, "als")
+            feats.append(extract_features(i_n, r_n, j_n))
+            labels.append(0 if te <= ta else 1)
+            times.append((te, ta))
+        if verbose and (t + 1) % 10 == 0:
+            print(f"[selector] {t + 1}/{n_tensors} tensors sampled")
+    return np.array(feats), np.array(labels), np.array(times)
+
+
+def train_selector(
+    feats: np.ndarray,
+    labels: np.ndarray,
+    test_split: float = 0.3,
+    seed: int = 0,
+) -> tuple[Selector, dict]:
+    """70/30 split + grid-search CV (paper defaults)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(labels))
+    n_test = int(len(labels) * test_split)
+    test, train = perm[:n_test], perm[n_test:]
+    tree, info = grid_search_cv(feats[train], labels[train])
+    info["test_accuracy"] = tree.score(feats[test], labels[test])
+    info["n_train"], info["n_test"] = len(train), len(test)
+    import jax
+    rng3 = (tuple(float(v) for v in feats[:, :3].min(0)),
+            tuple(float(v) for v in feats[:, :3].max(0)))
+    sel = Selector(tree=tree, platform=jax.default_backend(),
+                   trained_range=rng3)
+    return sel, info
+
+
+def train_and_save(platform: str | None = None, **collect_kw) -> dict:
+    feats, labels, _ = collect_samples(**collect_kw)
+    sel, info = train_selector(feats, labels)
+    sel.save(model_path(platform))
+    global _DEFAULT
+    _DEFAULT = sel
+    return info
+
+
+if __name__ == "__main__":  # pragma: no cover
+    import argparse
+    ap = argparse.ArgumentParser(description="Train the a-Tucker solver selector")
+    ap.add_argument("--n-tensors", type=int, default=120)
+    ap.add_argument("--max-dim", type=int, default=192)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    info = train_and_save(n_tensors=args.n_tensors,
+                          dim_range=(10, args.max_dim), verbose=args.verbose)
+    print(json.dumps(info, indent=2))

@@ -1,0 +1,171 @@
+"""Mode-wise flexible st-HOSVD (a-Tucker Alg. 2) and coarse-grained variants.
+
+The mode loop runs at trace/Python level (every mode has different shapes →
+separate XLA programs anyway, exactly like the per-mode kernel launches in
+the paper); each per-mode solve is a jitted, matricization-free program.
+
+``methods`` accepts:
+  - "auto"              → adaptive selector (decision tree, cost-model fallback)
+  - "eig"/"als"/"svd"   → coarse-grained single solver (paper baselines)
+  - sequence per mode   → explicit mode-wise schedule, e.g. ("eig","als","als")
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import tensor_ops as T
+from .solvers import ALS, DEFAULT_ALS_ITERS, EIG, SOLVERS, SVD
+
+
+@dataclass
+class TuckerTensor:
+    """Result of a Tucker decomposition:  X ≈ G ×_1 U^(1) ··· ×_N U^(N)."""
+    core: jax.Array
+    factors: list[jax.Array]          # factors[n]: (I_n, R_n)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(u.shape[0] for u in self.factors)
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        return tuple(self.core.shape)
+
+    def reconstruct(self) -> jax.Array:
+        return T.reconstruct(self.core, self.factors)
+
+    def rel_error(self, x: jax.Array) -> jax.Array:
+        return T.rel_error(x, self.core, self.factors)
+
+    @property
+    def n_elements(self) -> int:
+        return int(self.core.size + sum(u.size for u in self.factors))
+
+    @property
+    def compression_ratio(self) -> float:
+        return float(math.prod(self.shape)) / float(self.n_elements)
+
+
+@dataclass
+class ModeTrace:
+    mode: int
+    method: str
+    i_n: int
+    r_n: int
+    j_n: int
+    seconds: float
+
+
+@dataclass
+class SthosvdResult:
+    tucker: TuckerTensor
+    trace: list[ModeTrace] = field(default_factory=list)
+    select_overhead_s: float = 0.0
+
+    @property
+    def methods(self) -> tuple[str, ...]:
+        return tuple(t.method for t in sorted(self.trace, key=lambda t: t.mode))
+
+
+def _resolve_methods(methods, n_modes: int) -> list[str]:
+    if isinstance(methods, str):
+        return [methods] * n_modes
+    methods = list(methods)
+    if len(methods) != n_modes:
+        raise ValueError(f"need {n_modes} per-mode methods, got {len(methods)}")
+    return methods
+
+
+def sthosvd(
+    x: jax.Array,
+    ranks: Sequence[int],
+    methods: str | Sequence[str] = "auto",
+    *,
+    selector: Callable[..., str] | None = None,
+    mode_order: Sequence[int] | None = None,
+    als_iters: int = DEFAULT_ALS_ITERS,
+    impl: str = "matfree",
+    block_until_ready: bool = False,
+) -> SthosvdResult:
+    """Flexible st-HOSVD (Alg. 2).  Returns factors, core, per-mode trace.
+
+    ``mode_order`` defaults to the paper's 1..N sweep; adaptive shrink-ratio
+    ordering (beyond-paper, DESIGN.md §9.3) is available via
+    ``mode_order="shrink"``.
+    """
+    n = x.ndim
+    ranks = tuple(int(r) for r in ranks)
+    if len(ranks) != n:
+        raise ValueError(f"ranks {ranks} do not match tensor order {n}")
+    for m, (i, r) in enumerate(zip(x.shape, ranks)):
+        if not (1 <= r <= i):
+            raise ValueError(f"rank {r} invalid for mode {m} (dim {i})")
+
+    if mode_order is None:
+        order = list(range(n))
+    elif mode_order == "shrink":
+        order = sorted(range(n), key=lambda m: ranks[m] / x.shape[m])
+    else:
+        order = list(mode_order)
+        if sorted(order) != list(range(n)):
+            raise ValueError(f"mode_order {order} must be a permutation of 0..{n-1}")
+
+    fixed = None if methods == "auto" else _resolve_methods(methods, n)
+    if methods == "auto" and selector is None:
+        from .selector import default_selector
+        selector = default_selector()
+
+    y = x
+    factors: list[jax.Array | None] = [None] * n
+    trace: list[ModeTrace] = []
+    select_overhead = 0.0
+
+    for mode in order:
+        i_n = y.shape[mode]
+        r_n = ranks[mode]
+        j_n = y.size // i_n
+        if fixed is not None:
+            method = fixed[mode]
+        else:
+            t0 = time.perf_counter()
+            method = selector(i_n=i_n, r_n=r_n, j_n=j_n)
+            select_overhead += time.perf_counter() - t0
+        if method not in SOLVERS:
+            raise ValueError(f"unknown solver {method!r}")
+
+        t0 = time.perf_counter()
+        if method == ALS:
+            res = SOLVERS[ALS](y, mode, r_n, num_iters=als_iters, impl=impl)
+        else:
+            res = SOLVERS[method](y, mode, r_n, impl=impl)
+        if block_until_ready:
+            jax.block_until_ready(res.y_new)
+        dt = time.perf_counter() - t0
+
+        factors[mode] = res.u
+        y = res.y_new
+        trace.append(ModeTrace(mode, method, i_n, r_n, j_n, dt))
+
+    tucker = TuckerTensor(core=y, factors=factors)  # type: ignore[arg-type]
+    return SthosvdResult(tucker=tucker, trace=trace, select_overhead_s=select_overhead)
+
+
+# Coarse-grained baselines (paper Sec. VI) -----------------------------------
+
+def sthosvd_eig(x, ranks, **kw) -> SthosvdResult:
+    return sthosvd(x, ranks, methods=EIG, **kw)
+
+
+def sthosvd_als(x, ranks, **kw) -> SthosvdResult:
+    return sthosvd(x, ranks, methods=ALS, **kw)
+
+
+def sthosvd_svd(x, ranks, **kw) -> SthosvdResult:
+    return sthosvd(x, ranks, methods=SVD, **kw)

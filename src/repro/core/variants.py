@@ -1,0 +1,92 @@
+"""Tucker-decomposition variants beyond st-HOSVD (paper §II-B / §VIII).
+
+The paper focuses on st-HOSVD and names t-HOSVD and HOOI as the natural
+extensions ("owning to the similar algorithm structure, the proposed ideas
+and optimizations can also be extended") — both are built here on the same
+matricization-free solvers and the same adaptive selector:
+
+  * t-HOSVD: every factor computed from the ORIGINAL tensor (no sequential
+    shrinking) — more flops, sometimes preferred for parallel factor
+    computation.
+  * HOOI: higher-order orthogonal iteration — alternating refinement of the
+    factors, initialized from st-HOSVD (the standard pairing).  Each inner
+    subproblem is a mode solve of the partially-projected tensor, so the
+    EIG/ALS switch and the selector apply verbatim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import tensor_ops as T
+from .solvers import DEFAULT_ALS_ITERS, SOLVERS
+from .sthosvd import SthosvdResult, ModeTrace, TuckerTensor, sthosvd
+
+
+def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
+           selector=None, als_iters: int = DEFAULT_ALS_ITERS) -> SthosvdResult:
+    """Truncated HOSVD: factors from the original tensor, one projection."""
+    n = x.ndim
+    ranks = tuple(int(r) for r in ranks)
+    if methods == "auto" and selector is None:
+        from .selector import default_selector
+        selector = default_selector()
+
+    factors = []
+    trace = []
+    for mode in range(n):
+        i_n, r_n = x.shape[mode], ranks[mode]
+        j_n = x.size // i_n
+        method = (selector(i_n=i_n, r_n=r_n, j_n=j_n) if methods == "auto"
+                  else (methods if isinstance(methods, str) else methods[mode]))
+        kw = {"num_iters": als_iters} if method == "als" else {}
+        res = SOLVERS[method](x, mode, r_n, **kw)
+        factors.append(res.u)
+        trace.append(ModeTrace(mode, method, i_n, r_n, j_n, 0.0))
+    core = x
+    for mode, u in enumerate(factors):
+        core = T.ttm(core, u.T, mode)
+    return SthosvdResult(TuckerTensor(core=core, factors=factors), trace=trace)
+
+
+def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
+         selector=None, als_iters: int = DEFAULT_ALS_ITERS,
+         init: SthosvdResult | None = None) -> SthosvdResult:
+    """Higher-order orthogonal iteration, st-HOSVD-initialized.
+
+    Per sweep and mode: project x on all OTHER factors, then solve the mode
+    with the flexible (selector-driven) solver.  Error is non-increasing in
+    exact arithmetic; typically converges in 2–5 sweeps.
+    """
+    n = x.ndim
+    ranks = tuple(int(r) for r in ranks)
+    if methods == "auto" and selector is None:
+        from .selector import default_selector
+        selector = default_selector()
+
+    base = init or sthosvd(x, ranks, methods=methods, selector=selector,
+                           als_iters=als_iters)
+    factors = list(base.tucker.factors)
+    trace = list(base.trace)
+
+    for _ in range(n_iters):
+        for mode in range(n):
+            # project on every factor except `mode`
+            y = x
+            for m, u in enumerate(factors):
+                if m != mode:
+                    y = T.ttm(y, u.T, m)
+            i_n, r_n = y.shape[mode], ranks[mode]
+            j_n = y.size // i_n
+            method = (selector(i_n=i_n, r_n=r_n, j_n=j_n) if methods == "auto"
+                      else (methods if isinstance(methods, str) else methods[mode]))
+            kw = {"num_iters": als_iters} if method == "als" else {}
+            res = SOLVERS[method](y, mode, r_n, **kw)
+            factors[mode] = res.u
+            trace.append(ModeTrace(mode, method, i_n, r_n, j_n, 0.0))
+
+    core = x
+    for mode, u in enumerate(factors):
+        core = T.ttm(core, u.T, mode)
+    return SthosvdResult(TuckerTensor(core=core, factors=factors), trace=trace)

@@ -1,0 +1,85 @@
+"""Deterministic, shardable, resumable data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` via counter-based RNG
+(threefry fold_in) — resumability and elasticity fall out for free:
+  * restart at step k ⇒ identical batch k (bit-exact resume),
+  * a different mesh re-derives its per-shard slice from the same global
+    batch (elastic re-sharding after degraded restart).
+
+Two sources: synthetic token streams (default; zipf-ish marginals so losses
+move) and a memory-mapped token file (``TokenFileSource``) for real corpora.
+Modality stubs (vlm patches / audio frames) are generated to the same
+deterministic rule, matching the brief's frontend-stub contract.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    source: str = "synthetic"        # synthetic | file
+    path: str | None = None          # token file (np.uint16/np.int32 binary)
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches for a (cfg, shape) cell."""
+
+    def __init__(self, dc: DataConfig, cfg: ModelConfig, seq_len: int,
+                 global_batch: int):
+        self.dc, self.cfg = dc, cfg
+        self.seq_len, self.global_batch = seq_len, global_batch
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.dc.seed), step)
+        b, t, v = self.global_batch, self.seq_len, self.cfg.vocab
+        kt, kp = jax.random.split(key)
+        # zipf-ish marginal: squash uniform^3 toward low ids, plus a copy
+        # motif (periodic repetition) so models can actually reduce loss
+        u = jax.random.uniform(kt, (b, t + 1))
+        toks = (u ** 3 * (v - 1)).astype(jnp.int32)
+        period = 7
+        base = toks[:, :period]
+        reps = jnp.tile(base, (1, (t + 1) // period + 1))[:, : t + 1]
+        mix = jax.random.bernoulli(kp, 0.5, (b, 1))
+        toks = jnp.where(mix, reps, toks)
+        out = {"tokens": toks}
+        if self.cfg.family == "vlm":
+            out["patches"] = jax.random.normal(
+                kp, (b, self.cfg.n_patches, self.cfg.d_model), jnp.float32)
+        if self.cfg.family == "encdec":
+            out = {"frames": jax.random.normal(kp, (b, t, self.cfg.d_model), jnp.float32),
+                   "tokens": toks}
+        return out
+
+
+class TokenFileSource:
+    """Memory-mapped token corpus; window sampling is (seed, step)-pure."""
+
+    def __init__(self, dc: DataConfig, cfg: ModelConfig, seq_len: int,
+                 global_batch: int):
+        assert dc.path, "TokenFileSource needs DataConfig.path"
+        self.tokens = np.memmap(dc.path, dtype=np.int32, mode="r")
+        self.dc, self.cfg = dc, cfg
+        self.seq_len, self.global_batch = seq_len, global_batch
+
+    def batch_at(self, step: int) -> dict:
+        n = len(self.tokens) - (self.seq_len + 1)
+        rng = np.random.default_rng((self.dc.seed, step))
+        starts = rng.integers(0, n, size=self.global_batch)
+        toks = np.stack([self.tokens[s: s + self.seq_len + 1] for s in starts])
+        return {"tokens": jnp.asarray(toks % self.cfg.vocab, jnp.int32)}
+
+
+def make_source(dc: DataConfig, cfg: ModelConfig, shape: ShapeConfig):
+    cls = TokenFileSource if dc.source == "file" else SyntheticLM
+    return cls(dc, cfg, shape.seq_len, shape.global_batch)

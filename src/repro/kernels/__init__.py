@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for a-Tucker's matricization-free hot spots.
+
+Kernels (each with BlockSpec VMEM tiling; validated vs ref.py in
+tests/test_kernels.py via interpret mode):
+  matmul.matmul        — tiled MXU GEMM (boundary-mode TTM)
+  ttm.ttm_interior     — interior-mode batched-GEMM TTM
+  ttt.ttt_pallas3      — TTT / Gram contraction over merged outer+inner dims
+
+ops.py carries the jit'd, shape-padding public wrappers.
+"""
+
+from . import ops, ref
+from .matmul import matmul
+from .ttm import ttm_interior
+from .ttt import ttt_pallas3
+
+__all__ = ["matmul", "ops", "ref", "ttm_interior", "ttt_pallas3"]

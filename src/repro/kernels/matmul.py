@@ -1,0 +1,52 @@
+"""Tiled MXU matmul Pallas kernel: C (M,N) = A (M,K) @ B (K,N), fp32 accum.
+
+Used for the first-mode / last-mode TTM cases of the matricization-free
+st-HOSVD (paper Fig. 4: the boundary modes collapse to a single GEMM).
+
+Blocking: (bm, bk) × (bk, bn) tiles streamed HBM→VMEM; grid =
+(M/bm, N/bn, K/bk) with the contraction as the innermost (minor) grid dim so
+the output tile stays resident in VMEM across the K sweep (revolving
+accumulator pattern).  Tile defaults are MXU-aligned (128×128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = False) -> jax.Array:
+    """Pallas tiled matmul.  Requires M%bm == N%bn == K%bk == 0 (ops.py pads)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

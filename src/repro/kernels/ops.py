@@ -1,0 +1,124 @@
+"""jit'd public wrappers for the a-Tucker Pallas kernels.
+
+Dispatch mirrors the paper's Fig. 4 structure:
+  mode == 0    → single GEMM   u @ X_(0-view)          (matmul kernel)
+  mode == N-1  → single GEMM   X_(view) @ uᵀ           (matmul kernel)
+  interior     → batched GEMM over merged outer dims   (ttm_interior kernel)
+
+Wrappers zero-pad every tiled dim up to the block multiple (exact for the
+contraction dims, sliced off for output dims) and pick TPU-legal tiles:
+lane (last) dim tiles are multiples of 128, sublane dims multiples of 8.
+
+``interpret`` defaults to True off-TPU so the same code path validates on
+CPU (Pallas interpreter) and compiles to Mosaic on the TPU target.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+from .ttm import ttm_interior
+from .ttt import ttt_pallas3
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _tile(dim: int, cap: int, align: int) -> int:
+    """Tile size ≤ cap, aligned to ``align``, no larger than needed."""
+    return min(cap, _round_up(dim, align))
+
+
+def _pad_to(x: jax.Array, targets: tuple[int, ...]) -> jax.Array:
+    pads = [(0, t - s) for s, t in zip(x.shape, targets)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _as3(x: jax.Array, mode: int) -> jax.Array:
+    a = math.prod(x.shape[:mode]) if mode else 1
+    b = math.prod(x.shape[mode + 1:]) if mode < x.ndim - 1 else 1
+    return x.reshape(a, x.shape[mode], b)
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def ttm(x: jax.Array, u: jax.Array, mode: int, *, interpret: bool | None = None) -> jax.Array:
+    """Mode-n TTM via Pallas.  u: (R, I_mode).  Returns fp32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    r, i = u.shape
+    assert x.shape[mode] == i, (x.shape, u.shape, mode)
+    out_shape = x.shape[:mode] + (r,) + x.shape[mode + 1:]
+    n = x.ndim
+
+    if mode == 0:
+        x2 = x.reshape(i, -1)
+        bm = _tile(r, 128, 8)
+        bk = _tile(i, 128, 8)
+        bn = _tile(x2.shape[1], 512, 128)
+        up = _pad_to(u, (_round_up(r, bm), _round_up(i, bk)))
+        xp = _pad_to(x2, (_round_up(i, bk), _round_up(x2.shape[1], bn)))
+        y = matmul(up, xp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+        y = y[:r, :x2.shape[1]]
+    elif mode == n - 1:
+        x2 = x.reshape(-1, i)
+        m = x2.shape[0]
+        bm = _tile(m, 128, 8)
+        bk = _tile(i, 128, 8)
+        bn = _tile(r, 128, 128)
+        xp = _pad_to(x2, (_round_up(m, bm), _round_up(i, bk)))
+        ut = _pad_to(u.T, (_round_up(i, bk), _round_up(r, bn)))
+        y = matmul(xp, ut, bm=bm, bn=bn, bk=bk, interpret=interpret)
+        y = y[:m, :r]
+    else:
+        x3 = _as3(x, mode)
+        a, _, b = x3.shape
+        br = _tile(r, 128, 8)
+        bi = _tile(i, 128, 8)
+        bb = _tile(b, 256, 128)
+        up = _pad_to(u, (_round_up(r, br), _round_up(i, bi)))
+        xp = _pad_to(x3, (a, _round_up(i, bi), _round_up(b, bb)))
+        y = ttm_interior(up, xp, br=br, bb=bb, bi=bi, interpret=interpret)
+        y = y[:, :r, :b]
+    return y.reshape(out_shape)
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def ttt(x: jax.Array, y: jax.Array, mode: int, *, interpret: bool | None = None) -> jax.Array:
+    """z (I_mode, R_mode) = contraction of x, y over all modes but ``mode``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    x3 = _as3(x, mode)
+    y3 = _as3(y, mode)
+    a, i, b = x3.shape
+    _, r, _ = y3.shape
+    bi = _tile(i, 128, 8)
+    br = _tile(r, 128, 128)   # r is the lane dim of the output
+    bb = _tile(b, 256, 128)
+    xp = _pad_to(x3, (a, _round_up(i, bi), _round_up(b, bb)))
+    yp = _pad_to(y3, (a, _round_up(r, br), _round_up(b, bb)))
+    z = ttt_pallas3(xp, yp, bi=bi, br=br, bb=bb, interpret=interpret)
+    return z[:i, :r]
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def gram(x: jax.Array, mode: int, *, interpret: bool | None = None) -> jax.Array:
+    """S (I_mode, I_mode) = Y_(n) Y_(n)ᵀ without unfolding."""
+    interpret = _default_interpret() if interpret is None else interpret
+    x3 = _as3(x, mode)
+    a, i, b = x3.shape
+    # one tile size for both output axes (the padded I must tile both ways)
+    bi = br = _tile(i, 128, 128)
+    bb = _tile(b, 256, 128)
+    xp = _pad_to(x3, (a, _round_up(i, bi), _round_up(b, bb)))
+    z = ttt_pallas3(xp, xp, bi=bi, br=br, bb=bb, interpret=interpret)
+    return z[:i, :i]

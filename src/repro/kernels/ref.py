@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (standalone; no kernel imports).
+
+These are the ground truth for the per-kernel allclose sweeps in
+tests/test_kernels.py.  Written naively on purpose — correctness over speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   precision=jax.lax.Precision.HIGHEST)
+
+
+def ttm_interior_ref(u: jax.Array, x3: jax.Array) -> jax.Array:
+    """out (A, R, B) = einsum('rn,anb->arb')."""
+    return jnp.einsum("rn,anb->arb", u.astype(jnp.float32), x3.astype(jnp.float32),
+                      precision=jax.lax.Precision.HIGHEST)
+
+
+def ttt_ref(x3: jax.Array, y3: jax.Array) -> jax.Array:
+    """z (I, R) = einsum('aib,arb->ir')."""
+    return jnp.einsum("aib,arb->ir", x3.astype(jnp.float32), y3.astype(jnp.float32),
+                      precision=jax.lax.Precision.HIGHEST)
+
+
+def gram_ref(x3: jax.Array) -> jax.Array:
+    return ttt_ref(x3, x3)
+
+
+def ttm_full_ref(x: jax.Array, u: jax.Array, mode: int) -> jax.Array:
+    """Full mode-n TTM oracle via explicit matricization."""
+    xm = jnp.moveaxis(x, mode, 0).astype(jnp.float32)
+    y2 = jnp.dot(u.astype(jnp.float32), xm.reshape(x.shape[mode], -1),
+                 precision=jax.lax.Precision.HIGHEST)
+    out_shape = (u.shape[0],) + x.shape[:mode] + x.shape[mode + 1:]
+    return jnp.moveaxis(y2.reshape(out_shape), 0, mode)
+
+
+def gram_full_ref(x: jax.Array, mode: int) -> jax.Array:
+    xm = jnp.moveaxis(x, mode, 0).astype(jnp.float32).reshape(x.shape[mode], -1)
+    return jnp.dot(xm, xm.T, precision=jax.lax.Precision.HIGHEST)

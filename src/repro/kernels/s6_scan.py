@@ -1,0 +1,75 @@
+"""Fused S6 (Mamba-1 selective scan) forward Pallas kernel.
+
+The TPU adaptation of the CUDA selective-scan kernel: the (d_inner, N)
+recurrent state lives in a VMEM scratch buffer that persists across the
+sequential T-chunk grid dimension, so HBM traffic is O(T·d_inner) for
+inputs/outputs — the (T, d_inner, N) state expansion that the pure-jnp
+chunked scan materializes (ssm.py `_s6_scan`) never leaves VMEM.  That
+expansion is N× the payload (N = 16): this kernel removes the dominant
+memory-roofline term of the falcon-mamba cells (EXPERIMENTS.md §Perf C).
+
+Grid: (B, d_inner/bd, T/bt) — T innermost (TPU grids run sequentially, so
+the scratch state carries); the state resets when the chunk index hits 0.
+
+Forward-only: serving (prefill/decode) needs no backward; training falls
+back to the chunked jnp scan (a custom_vjp reverse-scan kernel is the
+natural extension).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _s6_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scratch):
+    @pl.when(pl.program_id(2) == 0)
+    def _reset():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    a = a_ref[...]                                    # (bd, N)
+    bt = x_ref.shape[1]
+
+    def step(tau, h):
+        dt_t = dt_ref[0, tau, :]                      # (bd,)
+        x_t = x_ref[0, tau, :]
+        b_t = b_ref[0, tau, :]                        # (N,)
+        c_t = c_ref[0, tau, :]
+        da = jnp.exp(dt_t[:, None] * a)               # (bd, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, tau, :] = (h * c_t[None, :]).sum(axis=1)
+        return h
+
+    h_scratch[...] = jax.lax.fori_loop(0, bt, step, h_scratch[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bt", "interpret"))
+def s6_scan_fwd(x, dt, bmat, cmat, a, *, bd: int = 512, bt: int = 64,
+                interpret: bool | None = None) -> jax.Array:
+    """y (B,T,Di) = selective scan.  x/dt: (B,T,Di); bmat/cmat: (B,T,N);
+    a: (Di,N) negative.  Di % bd == 0 and T % bt == 0 (ops-level pad)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, di = x.shape
+    n = bmat.shape[-1]
+    assert di % bd == 0 and t % bt == 0, (x.shape, bd, bt)
+    grid = (b, di // bd, t // bt)
+    return pl.pallas_call(
+        _s6_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda bb, dd, tt: (bb, tt, dd)),
+            pl.BlockSpec((1, bt, bd), lambda bb, dd, tt: (bb, tt, dd)),
+            pl.BlockSpec((1, bt, n), lambda bb, dd, tt: (bb, tt, 0)),
+            pl.BlockSpec((1, bt, n), lambda bb, dd, tt: (bb, tt, 0)),
+            pl.BlockSpec((bd, n), lambda bb, dd, tt: (dd, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bd), lambda bb, dd, tt: (bb, tt, dd)),
+        out_shape=jax.ShapeDtypeStruct((b, t, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a)

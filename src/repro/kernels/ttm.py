@@ -1,0 +1,57 @@
+"""Matricization-free interior-mode TTM Pallas kernel (a-Tucker Sec. V).
+
+Computes  out[a, r, b] = Σ_i  u[r, i] · x[a, i, b]  on the (A, I_n, B) view
+of the tensor — i.e. the paper's batched-GEMM organization of mode-n TTM,
+with the BlockSpec index maps playing the role of the (outer, along, inner)
+loop split: grid dim 0 walks the merged *outer* loops (A), dims 1/2 tile the
+output (R, B), and dim 3 is the contraction sweep along mode n.
+
+The tensor is NEVER unfolded: the x BlockSpec reads (1, bi, bb) tiles
+straight from the tensor's native row-major layout (B is the contiguous
+axis → lane dimension; I_n is the sublane dimension), so HBM traffic equals
+the tensor's footprint with zero transpose/copy — the TPU analogue of the
+paper's in-place batched GEMM on CPU/GPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ttm_kernel(u_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (br, bi) @ (bi, bb) -> (br, bb), accumulated in fp32 on the MXU.
+    o_ref[0, ...] += jax.lax.dot_general(
+        u_ref[...], x_ref[0, ...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bb", "bi", "interpret"))
+def ttm_interior(u: jax.Array, x3: jax.Array, *, br: int = 128, bb: int = 128,
+                 bi: int = 128, interpret: bool = False) -> jax.Array:
+    """out (A, R, B) = einsum('rn,anb->arb', u, x3).  Dims must tile evenly."""
+    a, i, b = x3.shape
+    r, i2 = u.shape
+    assert i == i2, (u.shape, x3.shape)
+    assert r % br == 0 and b % bb == 0 and i % bi == 0, (u.shape, x3.shape, br, bb, bi)
+    grid = (a, r // br, b // bb, i // bi)
+    return pl.pallas_call(
+        _ttm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bi), lambda aa, rr, bbb, ii: (rr, ii)),
+            pl.BlockSpec((1, bi, bb), lambda aa, rr, bbb, ii: (aa, ii, bbb)),
+        ],
+        out_specs=pl.BlockSpec((1, br, bb), lambda aa, rr, bbb, ii: (aa, rr, bbb)),
+        out_shape=jax.ShapeDtypeStruct((a, r, b), jnp.float32),
+        interpret=interpret,
+    )(u, x3)

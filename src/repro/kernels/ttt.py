@@ -1,0 +1,55 @@
+"""Matricization-free TTT / Gram Pallas kernel (a-Tucker Sec. V).
+
+Computes  z[i, r] = Σ_{a,b}  x[a, i, b] · y[a, r, b]  on (A, ·, B) views —
+the mode-(I,J) tensor-times-tensor product contracting every mode except the
+target one.  Gram (S = Y_(n) Y_(n)^T) is the special case y ≡ x, exactly as
+the paper treats it.
+
+Grid = (I/bi, R/br, A, B/bb) with BOTH reduction dims (A, B) innermost, so
+the (bi, br) output tile stays resident in VMEM while the kernel streams the
+two tensors tile-by-tile in their native layout (no unfold).  fp32
+accumulation on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ttt_kernel(x_ref, y_ref, o_ref):
+    @pl.when((pl.program_id(2) == 0) & (pl.program_id(3) == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (bi, bb) @ (br, bb)^T -> (bi, br)
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[0, ...], y_ref[0, ...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "br", "bb", "interpret"))
+def ttt_pallas3(x3: jax.Array, y3: jax.Array, *, bi: int = 128, br: int = 128,
+                bb: int = 128, interpret: bool = False) -> jax.Array:
+    """z (I, R) = einsum('aib,arb->ir', x3, y3).  Dims must tile evenly."""
+    a, i, b = x3.shape
+    a2, r, b2 = y3.shape
+    assert a == a2 and b == b2, (x3.shape, y3.shape)
+    assert i % bi == 0 and r % br == 0 and b % bb == 0, (x3.shape, y3.shape, bi, br, bb)
+    grid = (i // bi, r // br, a, b // bb)
+    return pl.pallas_call(
+        _ttt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bi, bb), lambda ii, rr, aa, bbb: (aa, ii, bbb)),
+            pl.BlockSpec((1, br, bb), lambda ii, rr, aa, bbb: (aa, rr, bbb)),
+        ],
+        out_specs=pl.BlockSpec((bi, br), lambda ii, rr, aa, bbb: (ii, rr)),
+        out_shape=jax.ShapeDtypeStruct((i, r), jnp.float32),
+        interpret=interpret,
+    )(x3, y3)

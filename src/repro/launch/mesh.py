@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state.  Single pod = 16×16 (256 chips, TPU v5e pod), multi-pod = 2 pods.
+``pod`` and ``data`` are both batch-parallel axes; ``model`` carries
+TP/EP/SP.  Hardware constants for the roofline live here too.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over however many (fake) devices the test process has."""
+    n = n_devices or len(jax.devices())
+    if multi_pod:
+        assert n % 2 == 0
+        return jax.make_mesh((2, n // 4, 2), ("pod", "data", "model"))
+    return jax.make_mesh((n // 2, 2), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# TPU v5e per-chip hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

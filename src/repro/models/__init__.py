@@ -1,0 +1,6 @@
+"""Model zoo substrate: layers, MoE, SSM, LM/enc-dec assemblies, registry,
+sharding rules.  See repro/configs for the 10 assigned architectures."""
+
+from . import config, layers, lm, moe, registry, shardings, ssm  # noqa: F401
+from .config import SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+from .registry import ModelBundle, build, input_specs  # noqa: F401

@@ -1,0 +1,164 @@
+"""Encoder-decoder backbone (seamless-m4t-medium assignment).
+
+The modality frontend is a stub per the brief: ``input_specs`` supplies
+precomputed frame embeddings (B, T_enc, d_model); this module owns the
+transformer encoder (bidirectional), the decoder (causal self-attn +
+cross-attn), and the text head.  "12L" is realized as 12 encoder + 12
+decoder layers (DESIGN.md §5).
+
+Decode cache = decoder self-attn KV (ring-free) + per-layer cross-attn K/V
+precomputed from the encoder memory once at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import attn_apply, attn_init, dense_init, mlp_apply, mlp_init, \
+    norm_apply, norm_init
+from .lm import BIG_WINDOW, logits_from_hidden
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def enc_layer_init(key, cfg: ModelConfig):
+    dtype = _dt(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"norm_attn": norm_init(cfg), "attn": attn_init(k1, cfg, dtype),
+            "norm_mlp": norm_init(cfg), "mlp": mlp_init(k2, cfg, dtype)}
+
+
+def dec_layer_init(key, cfg: ModelConfig):
+    dtype = _dt(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm_self": norm_init(cfg), "self_attn": attn_init(k1, cfg, dtype),
+            "norm_cross": norm_init(cfg), "cross_attn": attn_init(k2, cfg, dtype),
+            "norm_mlp": norm_init(cfg), "mlp": mlp_init(k3, cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": dense_init(kt, (cfg.vocab_padded, cfg.d_model),
+                            scale=cfg.d_model ** -0.5, dtype=_dt(cfg)),
+        "enc_layers": jax.vmap(lambda k: enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": norm_init(cfg),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T_enc, d) stubbed frontend embeddings → encoder memory."""
+    h = frames.astype(_dt(cfg))
+    b, t, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(h, lp):
+        x = norm_apply(lp["norm_attn"], h, cfg)
+        out, _ = attn_apply(lp["attn"], x, cfg, positions=positions, kind="bidir")
+        h = h + out
+        x = norm_apply(lp["norm_mlp"], h, cfg)
+        return h + mlp_apply(lp["mlp"], x, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return norm_apply(params["enc_norm"], h, cfg)
+
+
+def cross_kv(params, cfg: ModelConfig, memory):
+    """Precompute per-decoder-layer cross-attention K/V from the memory."""
+    b, s, _ = memory.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def one(lp):
+        k = (memory @ lp["cross_attn"]["wk"]).reshape(b, s, hkv, hd)
+        v = (memory @ lp["cross_attn"]["wv"]).reshape(b, s, hkv, hd)
+        return k, v
+
+    return jax.vmap(one)(params["dec_layers"])   # each (L, B, S, Hkv, D)
+
+
+def decode_hidden(params, cfg: ModelConfig, tokens, ckv, *, cache=None,
+                  cache_pos=None):
+    """Decoder stack.  ckv: (cross_k, cross_v) stacked per layer."""
+    h = params["embed"][tokens].astype(_dt(cfg))
+    b, t, _ = h.shape
+    if cache_pos is not None:
+        positions = jnp.full((b, t), cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(h, xs):
+        lp, ck, cv, lcache = xs
+        x = norm_apply(lp["norm_self"], h, cfg)
+        out, c = attn_apply(lp["self_attn"], x, cfg, positions=positions,
+                            kind="win", window=jnp.int32(BIG_WINDOW),
+                            cache=lcache, cache_pos=cache_pos)
+        h = h + out
+        x = norm_apply(lp["norm_cross"], h, cfg)
+        out, _ = attn_apply(lp["cross_attn"], x, cfg, positions=positions,
+                            kind="cross", cross_kv=(ck, cv))
+        h = h + out
+        x = norm_apply(lp["norm_mlp"], h, cfg)
+        h = h + mlp_apply(lp["mlp"], x, cfg)
+        return h, c
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, new_cache = jax.lax.scan(
+        body, h, (params["dec_layers"], ckv[0], ckv[1], cache))
+    h = norm_apply(params["final_norm"], h, cfg)
+    return h, (new_cache if cache is not None else None)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch):
+    """batch: {frames (B, T_enc, d), tokens (B, T_dec+1)}."""
+    memory = encode(params, cfg, batch["frames"])
+    ckv = cross_kv(params, cfg, memory)
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    h, _ = decode_hidden(params, cfg, inputs, ckv)
+    logits = logits_from_hidden(params, cfg, h)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_padded, dtype=logits.dtype)
+    nll = lse - jnp.sum(logits * onehot, axis=-1)
+    return nll.mean(), {"nll": nll.mean(), "aux": jnp.zeros((), jnp.float32)}
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, cache, cache_pos):
+    """cache: {'k','v' (L,B,S_dec,...), 'ck','cv' (L,B,S_enc,...)}."""
+    ckv = (cache["ck"], cache["cv"])
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+    h, new_self = decode_hidden(params, cfg, token, ckv,
+                                cache=self_cache, cache_pos=cache_pos)
+    logits = logits_from_hidden(params, cfg, h)
+    return logits, dict(cache, k=new_self["k"], v=new_self["v"])
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, cache):
+    memory = encode(params, cfg, frames)
+    ckv = cross_kv(params, cfg, memory)
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+    h, new_self = decode_hidden(params, cfg, tokens, ckv, cache=self_cache)
+    logits = logits_from_hidden(params, cfg, h[:, -1:])
+    return logits, dict(cache, k=new_self["k"], v=new_self["v"],
+                        ck=ckv[0], cv=ckv[1])
+
+
+def init_cache(cfg: ModelConfig, batch: int, dec_len: int, enc_len: int):
+    l, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    return {
+        "k": jnp.zeros((l, batch, dec_len, hkv, hd), dt),
+        "v": jnp.zeros((l, batch, dec_len, hkv, hd), dt),
+        "ck": jnp.zeros((l, batch, enc_len, hkv, hd), dt),
+        "cv": jnp.zeros((l, batch, enc_len, hkv, hd), dt),
+    }

@@ -1,0 +1,289 @@
+"""Transformer layer substrate: norms, RoPE, GQA attention, gated MLPs.
+
+Attention is blockwise (flash-style streaming over KV blocks with running
+max/sum carried through a ``lax.scan``) so 32k-prefill never materializes a
+(T, S) score matrix; decode takes the single-token path against a (possibly
+ring-buffered) KV cache.  Sliding-window, logit softcap (gemma2), qk-norm
+(gemma3) and local:global layer kinds are all mask-/transform-level options
+on one implementation.
+
+All params live in plain nested dicts; ``shardings.py`` assigns logical mesh
+axes by key-path pattern.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .config import ATTN_LOCAL, ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, dim: int | None = None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(x, scale):
+    """Per-head RMSNorm (gemma3 qk-norm).  x: (..., D)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (B, T, H, D); positions: (B, T); theta may be a traced scalar."""
+    d = x.shape[-1]
+    half = d // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (B, T, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+    return p
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def blockwise_attention(q, k, v, *, mask_fn, block_kv: int = 1024,
+                        softcap: float | None = None):
+    """Streaming softmax attention.  q: (B,T,Hq,D), k/v: (B,S,Hkv,D).
+
+    ``mask_fn(t_idx, s_idx) -> bool (T_blk, S_blk)`` gives position validity.
+    Never materializes (T, S); the KV sweep is a lax.scan carrying running
+    (max, sum, acc) — the flash-attention recurrence, XLA-fused on TPU.
+    """
+    b, t, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, t, hkv, g, d).astype(jnp.float32) / math.sqrt(d)
+
+    n_blocks = (s + block_kv - 1) // block_kv
+    s_pad = n_blocks * block_kv
+    if s_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, block_kv, hkv, d)
+    vb = v.reshape(b, n_blocks, block_kv, hkv, d)
+
+    t_idx = jnp.arange(t)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, sblk = blk                        # (B, bkv, Hkv, D), s offsets
+        scores = jnp.einsum("btkgd,bskd->btkgs", qg, kblk.astype(jnp.float32))
+        scores = _softcap(scores, softcap)
+        valid = mask_fn(t_idx, sblk) & (sblk < s)[None, :]          # (T, bkv)
+        scores = jnp.where(valid[None, :, None, None, :], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "btkgs,bskd->btkgd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, t, hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, t, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, t, hkv, g, d), jnp.float32)
+    s_offsets = (jnp.arange(n_blocks)[:, None] * block_kv
+                 + jnp.arange(block_kv)[None, :])                    # (nb, bkv)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), s_offsets))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, t, hq, d)
+
+
+def attn_apply(p, h, cfg: ModelConfig, *, positions, kind="win", theta=None,
+               window=None, cache=None, cache_pos=None, ring=False,
+               dtype=None, cross_kv=None):
+    """One attention block (no residual / norm — the caller owns those).
+
+    kind: 'win' (causal; ``window`` — a *traced* per-layer scalar — bounds
+          the lookback; pass BIG for global) | 'bidir' | 'cross'
+    theta: traced rope base (per-layer in local:global models).
+    cache: dict {k, v} (B, S_c, Hkv, D).  T==1 → decode (ring write when
+           ``ring``); T>1 with cache → prefill (populate cache slots).
+    Returns (out (B,T,d), new_cache | None).
+    """
+    dtype = dtype or h.dtype
+    b, t, _ = h.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if theta is None:
+        theta = jnp.float32(cfg.rope_theta)
+
+    q = (h @ p["wq"]).reshape(b, t, hq, hd)
+    if kind == "cross":
+        k, v = cross_kv
+    else:
+        k = (h @ p["wk"]).reshape(b, t, hkv, hd)
+        v = (h @ p["wv"]).reshape(b, t, hkv, hd)
+
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        if kind != "cross":
+            k = rms_head_norm(k, p["k_norm"])
+
+    if kind not in ("bidir", "cross"):
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    new_cache = None
+
+    if cache is not None and kind != "cross" and t == 1 and cache_pos is not None:
+        # ---- decode: write the token into the (ring) cache, attend over it.
+        # cache_pos may be a scalar or a per-slot (B,) vector (serve engine).
+        s_c = cache["k"].shape[1]
+        cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+        slot = cp % s_c if ring else jnp.minimum(cp, s_c - 1)
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        idx = jnp.arange(s_c)
+        written = jnp.minimum(cp + 1, s_c)                    # (B,)
+        valid = idx[None, :] < written[:, None]               # (B, S)
+        if ring:
+            full = cp >= s_c
+            valid = jnp.where(full[:, None], jnp.ones((b, s_c), bool), valid)
+        elif window is not None:
+            # linear cache: slot index == absolute position
+            valid &= (cp[:, None] - idx[None, :]) < window
+        qg = q.reshape(b, 1, hkv, hq // hkv, hd).astype(jnp.float32) / math.sqrt(hd)
+        scores = jnp.einsum("btkgd,bskd->btkgs", qg, ck.astype(jnp.float32))
+        scores = _softcap(scores, cfg.attn_softcap)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("btkgs,bskd->btkgd", w, cv.astype(jnp.float32))
+        out = out.reshape(b, 1, hq * hd)
+    else:
+        if cache is not None and kind != "cross":
+            # ---- prefill: populate cache slots with this sequence's k/v
+            s_c = cache["k"].shape[1]
+            if s_c >= t:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            else:  # ring: keep the last s_c tokens at their ring slots
+                slots = jnp.arange(t - s_c, t) % s_c
+                ck = cache["k"].at[:, slots].set(k[:, t - s_c:].astype(cache["k"].dtype))
+                cv = cache["v"].at[:, slots].set(v[:, t - s_c:].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+
+        if kind in ("bidir", "cross"):
+            mask_fn = lambda ti, si: jnp.ones((ti.shape[0], si.shape[0]), bool)
+        elif window is not None:
+            w_ = window
+            mask_fn = lambda ti, si: (si[None, :] <= ti[:, None]) & \
+                                     ((ti[:, None] - si[None, :]) < w_)
+        else:
+            mask_fn = lambda ti, si: si[None, :] <= ti[:, None]
+
+        def mk(ti, sblk):
+            return mask_fn(ti, sblk.reshape(-1)).reshape(ti.shape[0], -1)
+
+        if cfg.seq_shard_attn and t > 1:
+            from . import shardings
+            # context parallelism: queries sharded over 'model' on T; KV
+            # replicated over 'model' (GSPMD all-gathers them once per
+            # layer — tokens, not scores).  §Perf A4.
+            q = shardings.constrain(q, (("pod", "data"), "model", None, None))
+            k = shardings.constrain(k, (("pod", "data"), None, None, None))
+            v = shardings.constrain(v, (("pod", "data"), None, None, None))
+        if cfg.gqa_expand_kv and hq != hkv:
+            # GQA-expand: repeat KV to the full query-head count BEFORE the
+            # attention contractions.  The (kv, group) split of a sharded
+            # fused head dim defeats GSPMD when kv < mesh axis (it reverts to
+            # partial-sum scores → a per-KV-block all-reduce); expanded heads
+            # shard cleanly and attention stays collective-free.  §Perf A3.
+            g = hq // hkv
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        out = blockwise_attention(q, k, v, mask_fn=mk,
+                                  softcap=cfg.attn_softcap)
+        out = out.reshape(b, t, hq * hd)
+
+    return (out.astype(dtype) @ p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "relu2":
+        return {"wi": dense_init(ks[0], (d, ff), dtype=dtype),
+                "wo": dense_init(ks[1], (ff, d), dtype=dtype)}
+    return {"wi_gate": dense_init(ks[0], (d, ff), dtype=dtype),
+            "wi_up": dense_init(ks[1], (d, ff), dtype=dtype),
+            "wo": dense_init(ks[2], (ff, d), dtype=dtype)}
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    if cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+        return h @ p["wo"]
+    gate = x @ p["wi_gate"]
+    act = jax.nn.gelu(gate) if cfg.act == "gelu" else jax.nn.silu(gate)
+    return (act * (x @ p["wi_up"])) @ p["wo"]

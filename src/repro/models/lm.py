@@ -1,0 +1,321 @@
+"""Decoder-only LM assembly (dense / moe / ssm / hybrid / vlm families).
+
+Layer stack is a single ``lax.scan`` over stacked per-layer params (compact
+HLO, fast 512-device compile).  Heterogeneous attention patterns (gemma
+local:global) are expressed as *traced per-layer scalars* — effective window
+and rope theta ride through the scan as xs, so one attention code path
+serves every layer and no ``switch`` branches multiply the HLO.  zamba2's
+shared attention block (one param set, many sites) is a ``lax.cond`` on a
+per-layer site flag with the shared params closed over.
+
+Big-vocab safety: logits are only materialized inside the loss (sharded over
+the model axis); ``forward_hidden`` returns hidden states.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ATTN_LOCAL, ModelConfig
+from .layers import (attn_apply, attn_init, dense_init, mlp_apply, mlp_init,
+                     norm_apply, norm_init)
+from .moe import moe_apply, moe_init
+from .ssm import mamba1_apply, mamba1_init, mamba2_apply, mamba2_init
+from . import shardings
+
+BIG_WINDOW = 1 << 30
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig):
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    if cfg.family in ("ssm", "hybrid"):
+        p["norm_ssm"] = norm_init(cfg)
+        p["ssm"] = (mamba1_init if cfg.ssm_version == 1 else mamba2_init)(ks[0], cfg, dtype)
+        return p
+    p["norm_attn"] = norm_init(cfg)
+    p["attn"] = attn_init(ks[0], cfg, dtype)
+    p["norm_mlp"] = norm_init(cfg)
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg, dtype)
+    if cfg.post_norm:
+        p["post_attn"] = norm_init(cfg)
+        p["post_mlp"] = norm_init(cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = _dt(cfg)
+    k_embed, k_layers, k_shared, k_head, k_vis = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "embed": dense_init(k_embed, (cfg.vocab_padded, cfg.d_model),
+                            scale=cfg.d_model ** -0.5, dtype=dtype),
+        "final_norm": norm_init(cfg),
+    }
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        params["shared"] = {
+            "norm_attn": norm_init(cfg),
+            "attn": attn_init(k_shared, cfg, dtype),
+            "norm_mlp": norm_init(cfg),
+            "mlp": mlp_init(k_head, cfg, dtype),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_padded),
+                                       dtype=dtype)
+    if cfg.family == "vlm" and cfg.n_patches:
+        params["vis_proj"] = dense_init(k_vis, (cfg.d_model, cfg.d_model), dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# per-layer static schedules (traced through scan as xs)
+# ---------------------------------------------------------------------------
+
+def layer_schedule(cfg: ModelConfig):
+    kinds = cfg.layer_kinds()
+    window = jnp.array(
+        [cfg.sliding_window if k == ATTN_LOCAL else BIG_WINDOW for k in kinds],
+        jnp.int32)
+    theta = jnp.array(
+        [cfg.rope_theta if (k == ATTN_LOCAL or cfg.rope_theta_global is None)
+         else cfg.rope_theta_global for k in kinds], jnp.float32)
+    sites = jnp.array(cfg.shared_attn_sites(), jnp.int32)
+    return {"window": window, "theta": theta, "site": sites}
+
+
+# ---------------------------------------------------------------------------
+# transformer block bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, h, cfg, *, positions, window, theta, cache=None,
+                cache_pos=None, ring=False):
+    x = norm_apply(lp["norm_attn"], h, cfg)
+    out, new_cache = attn_apply(
+        lp["attn"], x, cfg, positions=positions, kind="win",
+        cache=cache, cache_pos=cache_pos, window=window, theta=theta, ring=ring)
+    if cfg.post_norm:
+        out = norm_apply(lp["post_attn"], out, cfg)
+    return h + out, new_cache
+
+
+def _mlp_block(lp, h, cfg):
+    x = norm_apply(lp["norm_mlp"], h, cfg)
+    if cfg.n_experts:
+        out, aux = moe_apply(lp["moe"], x, cfg)
+    else:
+        out, aux = mlp_apply(lp["mlp"], x, cfg), jnp.zeros((), jnp.float32)
+    if cfg.post_norm:
+        out = norm_apply(lp["post_mlp"], out, cfg)
+    return h + out, aux
+
+
+def _ssm_block(lp, h, cfg, *, cache=None):
+    x = norm_apply(lp["norm_ssm"], h, cfg)
+    apply = mamba1_apply if cfg.ssm_version == 1 else mamba2_apply
+    out, new_cache = apply(lp["ssm"], x, cfg, cache=cache)
+    return h + out, new_cache
+
+
+def _shared_attn_block(sp, h, cfg, *, positions, cache, cache_pos):
+    x = norm_apply(sp["norm_attn"], h, cfg)
+    out, new_cache = attn_apply(
+        sp["attn"], x, cfg, positions=positions, kind="win",
+        cache=cache, cache_pos=cache_pos, ring=False,
+        window=jnp.int32(BIG_WINDOW), theta=jnp.float32(cfg.rope_theta))
+    h = h + out
+    x = norm_apply(sp["norm_mlp"], h, cfg)
+    return h + mlp_apply(sp["mlp"], x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, patches=None):
+    h = params["embed"][tokens].astype(_dt(cfg))
+    if cfg.embed_scale:
+        h = h * math.sqrt(cfg.d_model)
+    if cfg.family == "vlm" and patches is not None:
+        vis = patches.astype(_dt(cfg)) @ params["vis_proj"]
+        h = jnp.concatenate([vis, h], axis=1)
+    return h
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, patches=None,
+                   positions=None, cache=None, cache_pos=None, ring=False):
+    """Run the stack.  Returns (hidden (B,T,d), new_cache, aux_loss).
+
+    ``ring``: static — the KV cache is a ring buffer shorter than the total
+    context (pure sliding-window models); slot indices then aren't absolute
+    positions and the window mask is implied by residency.
+    """
+    h = embed_tokens(params, cfg, tokens, patches)
+    h = shardings.constrain_batch(h)
+    b, t, _ = h.shape
+    if positions is None:
+        if cache_pos is not None:
+            cp = jnp.asarray(cache_pos, jnp.int32)
+            positions = (jnp.broadcast_to(cp.reshape(-1, 1), (b, t))
+                         if cp.ndim == 1 else jnp.full((b, t), cp, jnp.int32))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    sched = layer_schedule(cfg)
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, sch, lcache = xs
+        if cfg.seq_shard_residual and t > 1:
+            # sequence-parallel residual stream: T-sharded between blocks
+            h = shardings.constrain(h, (("pod", "data"), "model", None))
+        new_cache = lcache
+        if cfg.family in ("ssm", "hybrid"):
+            h, c = _ssm_block(lp, h, cfg, cache=lcache if lcache is None else
+                              {"conv": lcache["conv"], "ssm": lcache["ssm"]})
+            if lcache is not None:
+                new_cache = dict(lcache, conv=c["conv"], ssm=c["ssm"])
+            if cfg.family == "hybrid" and shared is not None:
+                def with_attn(args):
+                    h_, cache_ = args
+                    ac = None if lcache is None else {"k": cache_["k"], "v": cache_["v"]}
+                    h2, c2 = _shared_attn_block(shared, h_, cfg, positions=positions,
+                                                cache=ac, cache_pos=cache_pos)
+                    if lcache is None:
+                        return h2, cache_
+                    return h2, dict(cache_, k=c2["k"], v=c2["v"])
+
+                def without(args):
+                    return args
+
+                h, new_cache = jax.lax.cond(sch["site"] == 1, with_attn, without,
+                                            (h, new_cache))
+        else:
+            ac = None if lcache is None else {"k": lcache["k"], "v": lcache["v"]}
+            h, c = _attn_block(lp, h, cfg, positions=positions,
+                               window=sch["window"], theta=sch["theta"],
+                               cache=ac, cache_pos=cache_pos, ring=ring)
+            if lcache is not None:
+                new_cache = dict(lcache, k=c["k"], v=c["v"])
+            h, aux_l = _mlp_block(lp, h, cfg)
+            aux = aux + aux_l
+        return (h, aux), new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    xs = (params["layers"], sched, cache)
+    (h, aux), new_cache = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs)
+    h = norm_apply(params["final_norm"], h, cfg)
+    return h, (new_cache if cache is not None else None), aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h):
+    """Logits over the PADDED vocab (model-axis-shardable); the padded tail
+    is masked to -inf so softmax/sampling are exact w.r.t. the true vocab."""
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# task-level entry points
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: {tokens (B, T+1), [patches (B, Np, d)]} → (loss, aux_metrics)."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    h, _, aux = forward_hidden(params, cfg, inputs,
+                               patches=batch.get("patches"))
+    if cfg.family == "vlm" and batch.get("patches") is not None:
+        h = h[:, batch["patches"].shape[1]:]     # loss on text positions only
+    logits = logits_from_hidden(params, cfg, h)
+    # one-hot contraction instead of take_along_axis: the label logit becomes
+    # a reduction over the (model-sharded) vocab dim -> a small psum, never an
+    # all-gather of the logits
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_padded, dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - label_logit
+    loss = nll.mean() + aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, patches=None, ring=False):
+    """Full-sequence pass that returns last-position logits + the populated
+    decode cache.  ``cache`` supplies the (zeroed) layout to fill."""
+    h, new_cache, _ = forward_hidden(params, cfg, tokens, patches=patches,
+                                     cache=cache, ring=ring)
+    logits = logits_from_hidden(params, cfg, h[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, cache_pos, *, ring=False):
+    """One-token serve step.  token: (B, 1) int32; cache: stacked per-layer
+    pytree; cache_pos: scalar int32 position of this token."""
+    h, new_cache, _ = forward_hidden(params, cfg, token,
+                                     cache=cache, cache_pos=cache_pos, ring=ring)
+    logits = logits_from_hidden(params, cfg, h)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    kinds = cfg.layer_kinds()
+    if cfg.family in ("ssm",):
+        return 0
+    if cfg.sliding_window is not None and all(k == ATTN_LOCAL for k in kinds) \
+            and cfg.family != "hybrid":
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zeroed stacked decode cache for every layer."""
+    dtype = _dt(cfg)
+    l = cfg.n_layers
+    c: dict[str, Any] = {}
+    if cfg.family in ("ssm", "hybrid"):
+        di, n = cfg.d_inner, cfg.ssm_state
+        c["conv"] = jnp.zeros((l, batch, cfg.ssm_conv - 1, di), dtype)
+        if cfg.ssm_version == 1:
+            c["ssm"] = jnp.zeros((l, batch, di, n), jnp.float32)
+        else:
+            c["ssm"] = jnp.zeros((l, batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                                 jnp.float32)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            s = cache_len(cfg, seq_len)
+            c["k"] = jnp.zeros((l, batch, s, cfg.n_kv_heads, cfg.hd), dtype)
+            c["v"] = jnp.zeros((l, batch, s, cfg.n_kv_heads, cfg.hd), dtype)
+    else:
+        s = cache_len(cfg, seq_len)
+        c["k"] = jnp.zeros((l, batch, s, cfg.n_kv_heads, cfg.hd), dtype)
+        c["v"] = jnp.zeros((l, batch, s, cfg.n_kv_heads, cfg.hd), dtype)
+    return c

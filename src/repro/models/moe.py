@@ -1,0 +1,130 @@
+"""Top-k routed Mixture-of-Experts with sort-based capacity dispatch.
+
+Dispatch is computed PER GROUP (one group per batch row, vmapped) so the
+argsort and the (E, C, d) staging buffers stay sharded over the data axes —
+no global token sort, no global-capacity buffers (the standard GShard
+grouping, with megablocks-style gather instead of the (T, E, C) one-hot
+einsum whose dispatch tensor dwarfs the expert GEMMs at 32k context).
+
+Expert FFNs are single batched einsums over the expert dim, which shard
+cleanly over the model axis (d_ff sharding; expert sharding when E divides).
+
+Aux (load-balance) loss is the Switch formulation: E · Σ_e f_e · p̄_e.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import shardings
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), scale=1.0 / math.sqrt(d), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype=dtype),
+    }
+
+
+def _dispatch_group(xg, router, e: int, k: int, capacity: int):
+    """Per-group routing.  xg: (T, d) → (buf (E, C, d), combine info)."""
+    t, d = xg.shape
+    logits = xg.astype(jnp.float32) @ router                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # integer-only sort: no float keys ⇒ no (broken-in-this-jaxlib) sort JVP
+    flat_e = jax.lax.stop_gradient(top_e.reshape(-1))         # (T*K,) int32
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, stok, sp = flat_e[order], flat_tok[order], flat_p[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(t * k) - starts[se]
+    keep = slot < capacity
+    dest = jnp.where(keep, se * capacity + slot, e * capacity)
+
+    buf = jnp.zeros((e * capacity + 1, d), xg.dtype).at[dest].set(xg[stok])
+    buf = buf[:-1].reshape(e, capacity, d)
+    return buf, (dest, stok, sp, keep), (probs, top_e)
+
+
+def _ffn_combine(p_w, buf, dest, stok, sp, keep, e, capacity, t, d):
+    """Expert SwiGLU + scatter-combine.  With ff-sharded weights the output
+    is a PARTIAL sum over the ff shard — the caller decides where to reduce."""
+    gate = jnp.einsum("gecd,edf->gecf", buf, p_w["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, p_w["w_up"])
+    h = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p_w["w_down"])
+    b = buf.shape[0]
+    out_flat = out_buf.reshape(b, e * capacity, d)
+
+    def combine(ob, dest_g, stok_g, sp_g, keep_g):
+        contrib = ob[jnp.minimum(dest_g, e * capacity - 1)]
+        contrib = contrib * (keep_g * sp_g)[:, None].astype(ob.dtype)
+        return jnp.zeros((t, d), ob.dtype).at[stok_g].add(contrib)
+
+    return jax.vmap(combine)(out_flat, dest, stok, sp, keep)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (B, T, d) → (out (B, T, d), aux_loss scalar)."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = max(4, int(math.ceil(t * k / e * cfg.capacity_factor)))
+
+    disp = jax.vmap(lambda xg: _dispatch_group(xg, p["router"], e, k, capacity))
+    buf, (dest, stok, sp, keep), (probs, top_e) = disp(x)     # buf: (B,E,C,d)
+    # GSPMD loses the batch sharding through the dispatch scatter — re-pin the
+    # group dim so expert GEMMs stay data-parallel (16x redundancy otherwise)
+    buf = shardings.constrain_batch(buf)
+
+    # Switch aux loss over all tokens (indices reused from top_k — no float
+    # argsort, whose JVP is broken in this jaxlib build)
+    frac = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (b * t * k)
+    aux = cfg.router_aux_coef * e * jnp.sum(frac * probs.mean((0, 1)))
+
+    mesh = shardings.activation_mesh()
+    if cfg.moe_capacity_sharding:
+        # capacity-sharded TP: expert weights replicated, slots split over
+        # 'model' — expert GEMMs are local; the scatter/gather at dispatch
+        # and combine move token-sized data only
+        buf = shardings.constrain(buf, (("pod", "data"), None, "model", None))
+        y = _ffn_combine(p, buf, dest, stok, sp, keep, e, capacity, t, d)
+    elif cfg.moe_combine_shardmap and mesh is not None and "model" in mesh.shape:
+        # explicit collective schedule: expert FFN + combine run manually over
+        # the model axis; the psum then moves (T, d) tokens, not (E, C, d)
+        # capacity slots (≈ top_k·capacity_factor× fewer bytes)
+        from jax.sharding import PartitionSpec as P
+
+        def body(wg, wu, wd, buf_l, dest_l, stok_l, sp_l, keep_l):
+            y_part = _ffn_combine({"w_gate": wg, "w_up": wu, "w_down": wd},
+                                  buf_l, dest_l, stok_l, sp_l, keep_l,
+                                  e, capacity, t, d)
+            # f32 psum: this XLA build's AllReducePromotion pass crashes on
+            # bf16 all-reduce inside manual collectives
+            return jax.lax.psum(y_part.astype(jnp.float32), "model").astype(y_part.dtype)
+
+        y = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, None, "model"), P(None, None, "model"),
+                      P(None, "model", None), P(), P(), P(), P(), P()),
+            out_specs=P(),
+            axis_names={"model"}, check_vma=False,
+        )(p["w_gate"], p["w_up"], p["w_down"], buf, dest, stok, sp, keep)
+    else:
+        y = _ffn_combine(p, buf, dest, stok, sp, keep, e, capacity, t, d)
+
+    y = shardings.constrain_batch(y)
+    return y, aux

@@ -1,0 +1,112 @@
+"""Uniform per-architecture API: init / loss / prefill / decode / input_specs.
+
+``build(cfg)`` returns a ModelBundle whose entry points close over the
+config; ``input_specs`` produces weak-type-correct ShapeDtypeStructs for
+every step input so the multi-pod dry-run lowers without allocating.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .config import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, Any], tuple[jax.Array, dict]]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+    def abstract_params(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b: encdec.encdec_loss(p, cfg, b),
+            prefill=lambda p, b, cache: encdec.encdec_prefill(
+                p, cfg, b["frames"], b["tokens"], cache),
+            decode=lambda p, tok, cache, pos, total=None: encdec.encdec_decode_step(
+                p, cfg, tok, cache, pos),
+            init_cache=lambda batch, seq: encdec.init_cache(
+                cfg, batch, seq, seq),
+        )
+
+    ring = lambda seq: lm.cache_len(cfg, seq) < seq
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: lm.init_params(key, cfg),
+        loss=lambda p, b: lm.lm_loss(p, cfg, b),
+        prefill=lambda p, b, cache: lm.prefill(
+            p, cfg, b["tokens"], cache, patches=b.get("patches"),
+            ring=ring(b["tokens"].shape[1])),
+        decode=lambda p, tok, cache, pos, total=None: lm.decode_step(
+            p, cfg, tok, cache, pos,
+            ring=(ring(total) if total is not None else False)),
+        init_cache=lambda batch, seq: lm.init_cache(cfg, batch, seq),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train  → {'batch': {tokens[, patches, frames]}}
+    prefill→ {'batch': …, 'cache': zeroed layout}
+    decode → {'token', 'cache', 'pos'}
+    """
+    b = batch_override or shape.global_batch
+    t = shape.seq_len
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        batch: dict[str, Any] = {"tokens": _sds((b, t + 1), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((b, cfg.n_patches, d), jnp.float32)
+        if cfg.family == "encdec":
+            batch = {"frames": _sds((b, t, d), jnp.float32),
+                     "tokens": _sds((b, t + 1), jnp.int32)}
+        return {"batch": batch}
+
+    bundle_cache = cache_specs(cfg, b, t)
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, t), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((b, cfg.n_patches, d), jnp.float32)
+        if cfg.family == "encdec":
+            batch = {"frames": _sds((b, t, d), jnp.float32),
+                     "tokens": _sds((b, t), jnp.int32)}
+        return {"batch": batch, "cache": bundle_cache}
+
+    # decode
+    return {"token": _sds((b, 1), jnp.int32),
+            "cache": bundle_cache,
+            "pos": _sds((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family == "encdec":
+        zeros = encdec.init_cache
+        return jax.eval_shape(lambda: zeros(cfg, batch, seq, seq))
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, seq))

@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping and schedules (built here; no optax in
+this environment).  Pure pytree transforms, shard-friendly (element-wise)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float | None = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def _lr(self, count):
+        return self.lr(count) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, grads: Any, state: AdamWState, params: Any):
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            mh = m_new / bc1
+            vh = v_new / bc2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(count, new_m, new_v), {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(1, warmup)
+        frac = jnp.clip((c - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(c < warmup, warm, cos)
+    return lr

@@ -1,0 +1,252 @@
+"""Tucker gradient compression for cross-pod data parallelism.
+
+PowerSGD-style generalization of a-Tucker to distributed training: keep
+*shared* Tucker factors ``U^(n)`` per eligible gradient tensor and exchange
+only the small core
+
+    core_i = g_i ×_1 U^(1)ᵀ ··· ×_N U^(N)ᵀ        (linear in g_i!)
+
+so ``psum(core_i) == core(psum(g_i))`` and the cross-pod all-reduce moves
+``∏R_n / ∏I_n`` of the dense bytes.  Per-device error feedback keeps the
+update unbiased over time; factors are refreshed every ``refresh_every``
+steps by the *distributed st-HOSVD* — per-mode Gram partials + psum, i.e.
+the paper's EIG solver run mode-wise with sequential shrinking.  Because the
+psum'd Gram is identical on every pod and ``eigh`` is deterministic, all
+pods hold bit-identical factors without ever communicating them; only the
+small Grams travel, amortized over the refresh interval.
+
+Eligibility: tensors with ndim ≥ 3 and size ≥ min_size (a-Tucker targets
+dense tensors; scalars/matrices pass through dense).  With scan-over-layers
+every big LM gradient is naturally ≥ 3-D: (L, d, f), (L, E, d, f), …
+
+The refresh decision is STATIC: the trainer compiles two step variants
+(refresh / no-refresh) and picks per step at Python level — no collectives
+under data-dependent control flow.
+
+All functions are pure pytree→pytree transforms usable inside a
+``shard_map(axis_names={'pod'})`` manual section of the train step, or with
+``axis_name=None`` as a single-process compressor (checkpoint compression,
+tests).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import tensor_ops as T
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    rank_fraction: float = 0.25    # R_n = ceil(rank_fraction * I_n) on compressed modes
+    max_rank: int = 64
+    min_size: int = 65536          # below this, grads go dense
+    min_ndim: int = 3
+    refresh_every: int = 20        # factor refresh cadence (steps)
+    skip_first_mode: bool = True   # (L, d, f): layer/scan mode stays full rank
+    enabled: bool = True
+
+    def ranks_for(self, shape: tuple[int, ...]) -> tuple[int, ...] | None:
+        if not self.enabled or len(shape) < self.min_ndim:
+            return None
+        if math.prod(shape) < self.min_size:
+            return None
+        ranks = []
+        for m, d in enumerate(shape):
+            if self.skip_first_mode and m == 0:
+                ranks.append(d)   # identity mode (scan/layer axis)
+            else:
+                ranks.append(max(1, min(self.max_rank,
+                                        int(math.ceil(self.rank_fraction * d)))))
+        if math.prod(ranks) >= math.prod(shape):
+            return None           # no win — stay dense
+        return tuple(ranks)
+
+
+def init_state(cfg: CompressionConfig, grads_like: Any) -> Any:
+    """Per-leaf state: {'factors': [U^(n) | None per mode], 'error': 0s}.
+
+    Factor entries start as zeros; the trainer must run its FIRST step with
+    ``refresh=True`` so they are populated before use.
+    """
+    def leaf_state(g):
+        ranks = cfg.ranks_for(tuple(g.shape))
+        if ranks is None:
+            return EMPTY
+        factors = [
+            None if r == d else jnp.zeros((d, r), dtype=jnp.float32)
+            for d, r in zip(g.shape, ranks)
+        ]
+        return {"factors": factors, "error": jnp.zeros(g.shape, jnp.float32)}
+
+    return jax.tree.map(leaf_state, grads_like)
+
+
+class _Empty:
+    """Sentinel pytree leaf: 'this gradient is not compressed'."""
+    def __repr__(self):
+        return "EMPTY"
+
+
+EMPTY = _Empty()
+jax.tree_util.register_pytree_node(
+    _Empty, lambda e: ((), None), lambda aux, ch: EMPTY)
+
+
+def _project(g, factors):
+    """core = g ×_n U^(n)ᵀ over compressed modes."""
+    y = g
+    for mode, u in enumerate(factors):
+        if u is not None:
+            y = T.ttm(y, u.T.astype(y.dtype), mode)
+    return y
+
+
+def _expand(core, factors):
+    y = core
+    for mode, u in enumerate(factors):
+        if u is not None:
+            y = T.ttm(y, u.astype(y.dtype), mode)
+    return y
+
+
+def _refresh_factors(g_fb, factors, axis_name: str | None):
+    """Distributed st-HOSVD-EIG refresh with sequential shrinking."""
+    y = g_fb
+    new_factors = []
+    for mode, u in enumerate(factors):
+        if u is None:
+            new_factors.append(None)
+            continue
+        r = u.shape[1]
+        s = T.gram(y, mode)
+        if axis_name is not None:
+            s = jax.lax.psum(s, axis_name)
+        _, vecs = jnp.linalg.eigh(s)
+        un = vecs[:, -r:][:, ::-1]
+        new_factors.append(un)
+        y = T.ttm(y, un.T, mode)     # sequential shrink (st-HOSVD semantics)
+    return new_factors
+
+
+def compressed_bytes(cfg: CompressionConfig, shape: tuple[int, ...]) -> tuple[int, int]:
+    """(dense, compressed) all-reduce bytes per step for a grad of ``shape``
+    (fp32 wire format; Gram psums amortized over the refresh interval)."""
+    dense = 4 * math.prod(shape)
+    ranks = cfg.ranks_for(shape)
+    if ranks is None:
+        return dense, dense
+    core = 4 * math.prod(ranks)
+    gram_amort = sum(4 * d * d for d, r in zip(shape, ranks) if r != d)
+    return dense, core + gram_amort // max(1, cfg.refresh_every)
+
+
+def compress_psum(
+    cfg: CompressionConfig,
+    grads: Any,
+    state: Any,
+    *,
+    refresh: bool,
+    axis_name: str | None = "pod",
+) -> tuple[Any, Any, dict]:
+    """Compressed cross-``axis_name`` gradient mean with error feedback.
+
+    Returns ``(reduced_grads, new_state, stats)``.  ``refresh`` is static:
+    True recomputes the shared factors from this step's (feedback-corrected)
+    gradients via psum'd mode-wise Grams before projecting.
+    """
+    n_peers = jax.lax.psum(1, axis_name) if axis_name is not None else 1
+
+    acc = {"dense": 0, "compressed": 0}
+
+    def one(g, st):
+        if isinstance(st, _Empty) or st is None:
+            b = g.size * g.dtype.itemsize
+            acc["dense"] += b
+            acc["compressed"] += b
+            out = jax.lax.psum(g, axis_name) / n_peers if axis_name is not None else g
+            return out, EMPTY
+
+        g_fb = g.astype(jnp.float32) + st["error"]
+        factors = (_refresh_factors(g_fb, st["factors"], axis_name)
+                   if refresh else st["factors"])
+
+        core = _project(g_fb, factors)
+        if axis_name is not None:
+            core = jax.lax.psum(core, axis_name) / n_peers
+        g_hat = _expand(core, factors)
+        err = g_fb - _expand(_project(g_fb, factors), factors)
+
+        d, c = compressed_bytes(cfg, tuple(g.shape))
+        acc["dense"] += d
+        acc["compressed"] += c
+        return g_hat.astype(g.dtype), {"factors": factors, "error": err}
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state)
+    outs = [one(g, s) for g, s in zip(flat_g, flat_s)]
+    new_grads = treedef.unflatten([o[0] for o in outs])
+    new_state = treedef.unflatten([o[1] for o in outs])
+    stats = {"bytes_dense": acc["dense"], "bytes_compressed": acc["compressed"],
+             "ratio": acc["dense"] / max(1, acc["compressed"])}
+    return new_grads, new_state, stats
+
+
+# ---------------------------------------------------------------------------
+# shard_map plumbing: error buffers are PER-POD state (sharded on a stacked
+# leading axis); factors are replicated (they come out of psum'd Grams, so
+# vma inference proves replication).
+# ---------------------------------------------------------------------------
+
+def _is_state_leaf(x):
+    return isinstance(x, _Empty) or (isinstance(x, dict) and "error" in x)
+
+
+def state_specs(state: Any, pod_axis: str = "pod") -> Any:
+    """PartitionSpec pytree for the compressor state under shard_map."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(st):
+        if isinstance(st, _Empty):
+            return EMPTY
+        return {"factors": [None if u is None else P() for u in st["factors"]],
+                "error": P(pod_axis)}
+
+    return jax.tree.map(leaf, state, is_leaf=_is_state_leaf)
+
+
+def stack_for_pods(state: Any, n_pods: int) -> Any:
+    """Give every error buffer a leading (stacked) pod axis."""
+    def leaf(st):
+        if isinstance(st, _Empty):
+            return EMPTY
+        e = st["error"]
+        return {"factors": st["factors"],
+                "error": jnp.broadcast_to(e[None], (n_pods,) + e.shape)}
+
+    return jax.tree.map(leaf, state, is_leaf=_is_state_leaf)
+
+
+def localize(state: Any) -> Any:
+    """Inside shard_map: strip the (local, size-1) stacked pod axis."""
+    def leaf(st):
+        if isinstance(st, _Empty):
+            return EMPTY
+        return {"factors": st["factors"], "error": st["error"][0]}
+
+    return jax.tree.map(leaf, state, is_leaf=_is_state_leaf)
+
+
+def delocalize(state: Any) -> Any:
+    """Inside shard_map: re-add the stacked pod axis before returning."""
+    def leaf(st):
+        if isinstance(st, _Empty):
+            return EMPTY
+        return {"factors": st["factors"], "error": st["error"][None]}
+
+    return jax.tree.map(leaf, state, is_leaf=_is_state_leaf)

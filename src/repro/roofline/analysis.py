@@ -1,0 +1,263 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs / (chips × 197 TFLOP/s)
+  memory     = HLO_bytes / (chips × 819 GB/s)
+  collective = collective_bytes / (chips × 50 GB/s)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device
+program → multiply by chips for the global numerator, or equivalently use
+the per-device number over per-chip peak — we do the latter).
+collective_bytes is parsed from the compiled HLO text: the summed operand
+sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass
+from pathlib import Path
+
+from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# dtype[1,2,3]{layout} — layout part optional
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_INSTR = re.compile(
+    r"=\s*\(?((?:" + "|".join(_DTYPE_BYTES) + r")\[[0-9,]*\][^ ]*"
+    r"(?:,\s*(?:" + "|".join(_DTYPE_BYTES) + r")\[[0-9,]*\][^ )]*)*)\)?\s+"
+    r"([a-z][a-z0-9\-]*)\(")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _operand_bytes(ret_types: str, op: str, line: str) -> int:
+    """Operand bytes inferred from the RESULT type(s) + collective semantics
+    (compiled HLO prints operands without their types)."""
+    shapes = _SHAPE_RE.findall(ret_types)
+    total = sum(_shape_bytes(d, s) for d, s in shapes)
+    gs = 1
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        gs = int(m.group(2))
+    else:
+        m = re.search(r"replica_groups=\{(\{[^}]*\})", line)
+        if m:
+            gs = m.group(1).count(",") + 1
+    if op == "all-gather" and gs:
+        return total // gs          # operand = result / group
+    if op == "reduce-scatter" and gs:
+        return total * gs           # operand = result x group
+    return total                    # all-reduce / all-to-all / permute
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum EXECUTED operand bytes per collective kind.
+
+    Compiled HLO wraps the layer scan / microbatch loop in ``while`` ops, so
+    a static line count undercounts by the trip factor.  We build the
+    computation call graph (while bodies, fusions, calls, conditionals),
+    read each while's trip count from the integer bound in its condition
+    computation, and multiply bytes accordingly.
+    """
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _COMP_HDR.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+
+    def trip_count(cond_name: str) -> int:
+        ints = [int(x) for x in
+                _CONST_INT.findall("\n".join(comps.get(cond_name, [])))]
+        return max(ints) if ints else 1
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def walk(name: str) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {k: 0.0 for k in COLLECTIVE_OPS} | {"count": 0.0}
+        acc = {k: 0.0 for k in COLLECTIVE_OPS} | {"count": 0.0}
+        for line in comps.get(name, []):
+            m = _INSTR.search(line)
+            if m:
+                op = m.group(2)
+                base = op[:-6] if op.endswith("-start") else op
+                if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                    acc[base] += _operand_bytes(m.group(1), base, line)
+                    acc["count"] += 1
+            if " while(" in line:
+                mb = _WHILE_BODY.search(line)
+                mc = _WHILE_COND.search(line)
+                if mb:
+                    sub = walk(mb.group(1))
+                    t = trip_count(mc.group(1)) if mc else 1
+                    for k in acc:
+                        acc[k] += sub[k] * t
+            elif " conditional(" in line:
+                mb = _BRANCHES.search(line)
+                if mb:
+                    branches = [b.strip().lstrip("%") for b in mb.group(1).split(",")]
+                    subs = [walk(b) for b in branches if b in comps]
+                    if subs:   # worst-case branch
+                        worst = max(subs,
+                                    key=lambda s_: sum(s_[k] for k in COLLECTIVE_OPS))
+                        for k in acc:
+                            acc[k] += worst[k]
+            else:
+                mcall = _CALLS.search(line)
+                if mcall and (" fusion(" in line or " call(" in line):
+                    sub = walk(mcall.group(1))
+                    for k in acc:
+                        acc[k] += sub[k]
+        memo[name] = acc
+        return acc
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    out_f = (walk(entry) if entry
+             else {k: 0.0 for k in COLLECTIVE_OPS} | {"count": 0.0})
+    out = {k: int(v) for k, v in out_f.items()}
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    collective_bytes: float     # per device
+    model_flops: float          # 6·N·D (global, useful)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float         # model_flops / (hlo_flops × chips)
+    peak_bytes_per_device: float = 0.0
+
+    @classmethod
+    def from_cell(cls, *, arch, shape, mesh_name, chips, cost, collectives,
+                  model_flops, peak_bytes=0.0):
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        coll = float(collectives.get("total", 0))
+        compute_s = flops / PEAK_FLOPS_BF16
+        memory_s = byts / HBM_BW
+        collective_s = coll / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        bott = max(terms, key=terms.get)
+        useful = model_flops / max(1.0, flops * chips)
+        return cls(arch, shape, mesh_name, chips, flops, byts, coll,
+                   model_flops, compute_s, memory_s, collective_s, bott,
+                   useful, peak_bytes)
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """6·N·D for train (N = active params, D = tokens); decode: 2·N_active
+    per generated token + KV-cache read bytes are in the memory term."""
+    n = cfg.param_count()
+    if cfg.n_experts:
+        gated = 3 if cfg.act == "silu" else 2
+        dense_moe = cfg.n_layers * cfg.n_experts * gated * cfg.d_model * cfg.d_ff
+        active_moe = dense_moe * cfg.top_k / cfg.n_experts
+        n = n - dense_moe + active_moe
+    tokens = shape_cfg.global_batch * shape_cfg.seq_len
+    if shape_cfg.kind == "train":
+        return 6.0 * n * tokens
+    if shape_cfg.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape_cfg.global_batch      # decode: one token per seq
+
+
+def fmt_seconds(s: float) -> str:
+    if s < 1e-3:
+        return f"{s*1e6:.1f}µs"
+    if s < 1:
+        return f"{s*1e3:.2f}ms"
+    return f"{s:.2f}s"
+
+
+def load_artifacts(art_dir: str | Path) -> list[dict]:
+    out = []
+    for p in sorted(Path(art_dir).glob("**/*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def to_markdown_table(rows: list[Roofline]) -> str:
+    hdr = ("| arch | shape | mesh | compute | memory | collective | "
+           "bottleneck | useful |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {fmt_seconds(r.compute_s)} "
+            f"| {fmt_seconds(r.memory_s)} | {fmt_seconds(r.collective_s)} "
+            f"| {r.bottleneck} | {r.useful_ratio:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():  # pragma: no cover
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    args = ap.parse_args()
+    print("| arch | shape | mesh | compute | memory | collective | "
+          "bottleneck | roofline-frac | useful | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in load_artifacts(args.artifacts):
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        tot = max(r["compute_s"], r["memory_s"], r["collective_s"]) or 1.0
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {fmt_seconds(r['compute_s'])} | {fmt_seconds(r['memory_s'])} "
+              f"| {fmt_seconds(r['collective_s'])} | {r['bottleneck']} "
+              f"| {r['compute_s']/tot:.3f} | {r['useful_ratio']:.2f} "
+              f"| {d['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.2f} |")
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -1,0 +1,297 @@
+"""Trip-count-aware analyzer for compiled HLO text.
+
+XLA's ``cost_analysis()`` visits each ``while`` body ONCE, so scanned
+programs (layer stacks, microbatch loops, blockwise attention) under-count
+flops/bytes by the trip factor.  This walker rebuilds the numbers from the
+compiled module:
+
+  * per-computation symbol table (params + instruction defs) so operand
+    shapes resolve even though compiled HLO prints operands untyped,
+  * dot flops = 2 · |result| · K  (K from lhs contracting dims),
+  * memory traffic = Σ (operand + result bytes) over *top-level* ops —
+    fusion internals excluded, which models fused execution,
+  * collective bytes per kind (operand-sized, group-size-corrected),
+  * every term multiplied by the enclosing while trip counts (parsed from
+    the integer bound in the loop condition).
+
+Used by repro.roofline.analysis for the three roofline terms.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_TYPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^,)]*))")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_INT = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes_elems(type_str: str) -> tuple[int, list[tuple[str, list[int]]]]:
+    """Total bytes + parsed (dtype, dims) list for a (possibly tuple) type."""
+    total = 0
+    shapes = []
+    for dt, dims in _TYPE_RE.findall(type_str):
+        ds = [int(x) for x in dims.split(",")] if dims else []
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, ds))
+    return total, shapes
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    types: dict[str, str] = field(default_factory=dict)   # symbol → type str
+    instrs: list[Instr] = field(default_factory=list)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None or (line.endswith("{") and _COMP_HDR.match(line)):
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if raw.startswith("ENTRY"):
+                    entry = cur.name
+                # params carry types in the header
+                for pname, ptype in _PARAM_RE.findall(line):
+                    cur.types[pname] = ptype
+            continue
+        if line == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # result type = everything before the first `op(` call.  (The type
+        # prefix — including tuple /*index=N*/ comments and layout braces —
+        # never contains a `word(` token, so the first one is the op.)
+        om = re.search(r"(?:^|\s)([a-z][a-z0-9\-]*)\(", rest)
+        if not om:
+            continue
+        op = om.group(1)
+        rtype = rest[:om.start()].strip()
+        inside = rest[rest.index("(", om.start(1)) + 1:]
+        depth = 1
+        args = []
+        for i, ch in enumerate(inside):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = _OPND_RE.findall(inside[:i])
+                    break
+        cur.types[name] = rtype
+        cur.instrs.append(Instr(name, rtype, op, args, line))
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_bytes, out_shapes = _type_bytes_elems(ins.result_type)
+    if not out_shapes:
+        return 0.0
+    n_out = 1
+    for d in out_shapes[0][1]:
+        n_out *= d
+    # K = product of lhs contracting dim sizes
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    k = 1
+    if mc and ins.operands:
+        lhs_t = comp.types.get(ins.operands[0])
+        if lhs_t:
+            _, lshapes = _type_bytes_elems(lhs_t)
+            if lshapes:
+                dims = lshapes[0][1]
+                for ci in mc.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+    return 2.0 * n_out * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    _, out_shapes = _type_bytes_elems(ins.result_type)
+    if not out_shapes or len(ins.operands) < 2:
+        return 0.0
+    n_out = 1
+    for d in out_shapes[0][1]:
+        n_out *= d
+    rhs_t = comp.types.get(ins.operands[1])
+    k = 1
+    if rhs_t:
+        _, rshapes = _type_bytes_elems(rhs_t)
+        if rshapes:
+            for d in rshapes[0][1]:
+                k *= d
+    return 2.0 * n_out * k
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{(\{[^}]*\})", line)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+
+_ZERO = {"flops": 0.0, "traffic": 0.0, "traffic_ess": 0.0, "coll_count": 0.0,
+         **{k: 0.0 for k in COLLECTIVES}}
+
+# ops whose operands/results we count as HBM traffic at top level — the
+# UPPER BOUND metric (XLA:CPU fuses less than XLA:TPU, so this includes
+# elementwise chains a TPU build would fuse away)
+_TRAFFIC_OPS = ("fusion", "dot", "convolution", "copy", "convert", "bitcast",
+                "transpose", "reduce", "broadcast", "reshape", "scatter",
+                "gather", "dynamic-slice", "dynamic-update-slice", "sort",
+                "select-and-scatter", "pad", "concatenate", "slice",
+                "iota", "compare", "add", "multiply", "subtract", "divide",
+                "exponential", "tanh", "rsqrt", "maximum", "minimum") + \
+    COLLECTIVES + tuple(c + "-start" for c in COLLECTIVES)
+
+# ESSENTIAL traffic: operands/results that must cross HBM even under perfect
+# elementwise fusion (TPU target) — matmul I/O, cache/dispatch data movement,
+# collectives, sorts.  This is the memory-roofline numerator.
+_ESSENTIAL_OPS = ("dot", "convolution", "scatter", "gather", "dynamic-slice",
+                  "dynamic-update-slice", "sort", "select-and-scatter",
+                  "concatenate") + COLLECTIVES + \
+    tuple(c + "-start" for c in COLLECTIVES)
+
+
+def analyze(text: str) -> dict[str, float]:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return dict(_ZERO, coll_total=0.0)
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def trip_count(cond: str) -> int:
+        c = comps.get(cond)
+        if not c:
+            return 1
+        ints = [int(x) for i in c.instrs
+                for x in _CONST_INT.findall(i.line)]
+        return max(ints) if ints else 1
+
+    def walk(name: str) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = dict(_ZERO)          # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        acc = dict(_ZERO)
+
+        for ins in comp.instrs:
+            op = ins.op
+            base = op[:-6] if op.endswith("-start") else op
+            coll_b = 0
+            if base in COLLECTIVES and not op.endswith("-done"):
+                coll_b, _ = _type_bytes_elems(ins.result_type)
+                gs = _group_size(ins.line)
+                if base == "all-gather":
+                    coll_b = coll_b // max(1, gs)
+                elif base == "reduce-scatter":
+                    coll_b = coll_b * gs
+                acc[base] += coll_b
+                acc["coll_count"] += 1
+
+            if op == "dot":
+                acc["flops"] += _dot_flops(ins, comp)
+            elif op == "convolution":
+                acc["flops"] += _conv_flops(ins, comp)
+
+            def io_bytes():
+                b, _ = _type_bytes_elems(ins.result_type)
+                for o in ins.operands:
+                    t = comp.types.get(o)
+                    if t:
+                        b += _type_bytes_elems(t)[0]
+                return b
+
+            if op in _TRAFFIC_OPS and op != "bitcast":
+                acc["traffic"] += io_bytes()
+
+            if base in _ESSENTIAL_OPS and not op.endswith("-done"):
+                if base in COLLECTIVES:
+                    acc["traffic_ess"] += coll_b
+                elif base in ("gather", "dynamic-slice"):
+                    # reads only the gathered bytes, not the whole operand
+                    acc["traffic_ess"] += _type_bytes_elems(ins.result_type)[0]
+                elif base in ("scatter", "dynamic-update-slice"):
+                    # writes only the update slice (result aliases the buffer)
+                    upd = (comp.types.get(ins.operands[-1])
+                           if ins.operands else None)
+                    acc["traffic_ess"] += (_type_bytes_elems(upd)[0] if upd
+                                           else _type_bytes_elems(ins.result_type)[0])
+                else:
+                    acc["traffic_ess"] += io_bytes()
+
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if mb:
+                    sub = walk(mb.group(1))
+                    t = trip_count(mc.group(1)) if mc else 1
+                    for k in acc:
+                        acc[k] += sub[k] * t
+            elif op == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if mbr:
+                    branches = [b.strip().lstrip("%") for b in mbr.group(1).split(",")]
+                    subs = [walk(b) for b in branches if b in comps]
+                    if subs:
+                        worst = max(subs, key=lambda s: s["flops"] + s["traffic"])
+                        for k in acc:
+                            acc[k] += worst[k]
+            elif op in ("fusion", "call", "async-start"):
+                mcall = re.search(r"(?:calls|to_apply|called_computation)=%?([\w.\-]+)",
+                                  ins.line)
+                if mcall:
+                    sub = walk(mcall.group(1))
+                    # fusion internals: count FLOPs + essential traffic (dots
+                    # and scatters can live in fused computations on CPU) but
+                    # NOT upper-bound traffic (fused = no HBM for elementwise)
+                    acc["flops"] += sub["flops"]
+                    acc["traffic_ess"] += sub["traffic_ess"]
+                    for k in COLLECTIVES + ("coll_count",):
+                        acc[k] += sub[k]
+
+        memo[name] = acc
+        return acc
+
+    out = walk(entry)
+    out["coll_total"] = sum(out[k] for k in COLLECTIVES)
+    return out

@@ -1,0 +1,104 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step.
+
+Requests are admitted into fixed batch slots; each slot tracks its own
+position; finished slots (EOS or max_len) are refilled from the queue
+without stopping the batch — the decode step is one compiled program
+regardless of slot occupancy (inactive slots decode garbage that is masked
+out, the standard static-shape trick).
+
+Prefill runs per-request (right-padded to the slot's prompt bucket) and
+writes the slot's stripe of the batched KV cache.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.registry import ModelBundle
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    rid: int = 0
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, *, batch_slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None, seed: int = 0):
+        self.bundle = bundle
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = bundle.init_cache(batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+
+        self._decode = jax.jit(
+            lambda p, tok, c, pos: bundle.decode(p, tok, c, pos, max_len))
+        cfg = bundle.cfg
+
+        def prefill_one(p, tokens, cache_slice):
+            return bundle.prefill(p, {"tokens": tokens}, cache_slice)
+
+        self._prefill = jax.jit(prefill_one)
+
+    # -- slot management -----------------------------------------------------
+    def _admit(self, req: Request, slot: int):
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        slot_cache = jax.tree.map(lambda x: x[:, slot:slot + 1], self.cache)
+        logits, slot_cache = self._prefill(self.params, toks, slot_cache)
+        self.cache = jax.tree.map(
+            lambda full, s: full.at[:, slot:slot + 1].set(s), self.cache, slot_cache)
+        self.pos[slot] = len(req.prompt)
+        self.slot_req[slot] = req
+        first = self._sample(logits[:, -1])
+        req.output.append(int(first[0]))
+
+    def _sample(self, logits):
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(jnp.argmax(logits, -1))
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Request]:
+        queue = list(requests)
+        active = lambda: any(r is not None for r in self.slot_req)
+        while queue or active():
+            # fill empty slots
+            for s in range(self.b):
+                if self.slot_req[s] is None and queue:
+                    self._admit(queue.pop(0), s)
+            # one batched decode step: feed each slot its last token at its
+            # OWN position (per-slot position vector)
+            last = np.zeros((self.b, 1), np.int32)
+            for s, r in enumerate(self.slot_req):
+                if r is not None and r.output:
+                    last[s, 0] = r.output[-1]
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(last), self.cache,
+                jnp.asarray(self.pos, jnp.int32))
+            nxt = self._sample(logits[:, 0])
+            for s, r in enumerate(self.slot_req):
+                if r is None:
+                    continue
+                tok = int(nxt[s])
+                r.output.append(tok)
+                self.pos[s] += 1
+                if (self.eos is not None and tok == self.eos) or \
+                        len(r.output) >= r.max_new_tokens or \
+                        self.pos[s] >= self.max_len - 1:
+                    r.done = True
+                    self.slot_req[s] = None
+        return requests

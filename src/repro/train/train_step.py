@@ -1,0 +1,136 @@
+"""Train-step factory: microbatched grad accumulation, optional Tucker-
+compressed cross-pod gradient reduction, optimizer update.
+
+Two flavors:
+  * ``make_train_step``          — pure GSPMD step (dense all-reduce; XLA
+                                   schedules/overlaps collectives).
+  * ``make_compressed_train_step`` — ``shard_map(axis_names={'pod'})`` step:
+                                   grads are pod-local, the cross-pod mean
+                                   runs in the Tucker-compressed domain with
+                                   error feedback (DESIGN.md §4.1).  Inside
+                                   the body the remaining mesh axes stay in
+                                   GSPMD auto mode, so TP/FSDP still apply.
+
+The refresh cadence is static: the factory returns TWO jitted variants and
+``TrainLoop`` picks per step (no collectives under traced conditionals).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.registry import ModelBundle
+from ..optim import grad_compress as gc
+from ..optim.adamw import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+    step: jax.Array
+    compressor: Any = None          # grad-compression state (or None)
+
+
+def init_state(bundle: ModelBundle, optimizer: AdamW, key,
+               compression: gc.CompressionConfig | None = None,
+               n_pods: int = 1) -> TrainState:
+    params = bundle.init(key)
+    opt_state = optimizer.init(params)
+    comp = None
+    if compression is not None and compression.enabled:
+        comp = gc.init_state(compression, params)
+        comp = gc.stack_for_pods(comp, n_pods)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32), comp)
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """lax.scan over microbatch slices; returns (mean grads, mean metrics)."""
+    from ..models import shardings
+
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, dict(metrics, loss=loss)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (x.shape, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+
+    def body(acc, mb):
+        # the (B,)→(n_micro, B/n) reshape loses the batch sharding during
+        # GSPMD propagation; re-pin each microbatch to the data axes
+        mb = jax.tree.map(shardings.constrain_batch, mb)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc_g, acc_m = acc
+        acc_g = jax.tree.map(jnp.add, acc_g, grads)
+        acc_m = jax.tree.map(jnp.add, acc_m, dict(metrics, loss=loss))
+        return (acc_g, acc_m), None
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zero_m = {"loss": jnp.zeros(()), "nll": jnp.zeros(()), "aux": jnp.zeros(())}
+    (g, m), _ = jax.lax.scan(body, (zero_g, zero_m), micro)
+    scale = 1.0 / n_micro
+    return jax.tree.map(lambda x: x * scale, g), jax.tree.map(lambda x: x * scale, m)
+
+
+def make_train_step(bundle: ModelBundle, optimizer: AdamW, *, n_micro: int = 1,
+                    donate: bool = True):
+    """Plain GSPMD train step (dense grad reduction by XLA)."""
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        grads, metrics = _accumulate_grads(
+            lambda p, b: bundle.loss(p, b), state.params, batch, n_micro)
+        params, opt_state, om = optimizer.update(grads, state.opt_state, state.params)
+        return (TrainState(params, opt_state, state.step + 1, state.compressor),
+                {**metrics, **om})
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def make_compressed_train_step(bundle: ModelBundle, optimizer: AdamW,
+                               compression: gc.CompressionConfig, mesh, *,
+                               pod_axis: str = "pod", n_micro: int = 1):
+    """Returns {True: refresh_step, False: plain_step} jitted variants.
+
+    Batch must enter sharded over ``pod_axis`` on dim 0 (the pod's slice of
+    the global batch); params/opt replicated over pods (kept identical by
+    construction since the reduced grads are identical)."""
+
+    def make(refresh: bool):
+        def body(state: TrainState, batch):
+            grads, metrics = _accumulate_grads(
+                lambda p, b: bundle.loss(p, b), state.params, batch, n_micro)
+            red, new_comp, stats = gc.compress_psum(
+                compression, grads, gc.localize(state.compressor),
+                refresh=refresh, axis_name=pod_axis)
+            metrics = {**metrics,
+                       "comp_ratio": jnp.float32(stats["ratio"]),
+                       "loss": jax.lax.pmean(metrics["loss"], pod_axis)}
+            params, opt_state, om = optimizer.update(red, state.opt_state, state.params)
+            new_state = TrainState(params, opt_state, state.step + 1,
+                                   gc.delocalize(new_comp))
+            return new_state, {**metrics, **om}
+
+        def wrapped(state: TrainState, batch):
+            sspecs = gc.state_specs(state.compressor, pod_axis)
+            state_specs = TrainState(P(), P(), P(), sspecs)
+            # metrics out: replicated
+            return jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(state_specs, P(pod_axis)),
+                out_specs=(state_specs, P()),
+                axis_names={pod_axis},
+                check_vma=False,
+            )(state, batch)
+
+        return jax.jit(wrapped, donate_argnums=(0,))
+
+    return {True: make(True), False: make(False)}

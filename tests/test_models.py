@@ -1,0 +1,166 @@
+"""Per-arch smoke tests + decode/prefill consistency across families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build
+from repro.models.lm import cache_len, forward_hidden, logits_from_hidden
+
+RNG = np.random.default_rng(0)
+
+
+def make_batch(cfg, b=2, t=16):
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (b, t + 1)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            RNG.standard_normal((b, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch = {"frames": jnp.asarray(RNG.standard_normal((b, t, cfg.d_model)),
+                                       jnp.float32),
+                 "tokens": batch["tokens"]}
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+class TestArchSmoke:
+    def test_forward_loss_finite(self, arch):
+        cfg = configs.get_smoke(arch)
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        loss, metrics = jax.jit(bundle.loss)(params, make_batch(cfg))
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), arch
+        assert bool(jnp.isfinite(metrics["nll"]))
+
+    def test_train_step_finite(self, arch):
+        cfg = configs.get_smoke(arch)
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        (loss, _), grads = jax.jit(
+            jax.value_and_grad(bundle.loss, has_aux=True))(params, make_batch(cfg))
+        gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0, arch
+
+    def test_full_config_exact_numbers(self, arch):
+        """The FULL configs carry the exact assigned hyper-parameters."""
+        cfg = configs.get(arch)
+        assigned = {
+            "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+            "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+            "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+            "gemma2_9b": (42, 3584, 16, 8, 14336, 256000),
+            "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+            "phi3_mini_3p8b": (32, 3072, 32, 32, 8192, 32064),
+            "falcon_mamba_7b": (64, 4096, 1, 1, 0, 65024),
+            "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+            "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+            "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+        }[configs.canonical(arch)]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab)
+        assert got == assigned, (arch, got, assigned)
+
+
+DECODE_ARCHS = ["gemma3_1b", "gemma2_9b", "phi3_mini_3p8b", "minitron_4b",
+                "mixtral_8x22b", "granite_moe_3b_a800m", "falcon_mamba_7b",
+                "zamba2_1p2b", "internvl2_2b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_teacher_forced(arch):
+    cfg = configs.get_smoke(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(1))
+    B, T = 2, 21
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    h, _, _ = forward_hidden(params, cfg, toks)
+    ref = logits_from_hidden(params, cfg, h)
+    cache = bundle.init_cache(B, T)
+    step = jax.jit(lambda p, tok, c, pos: bundle.decode(p, tok, c, pos, T))
+    outs = []
+    for t in range(T):
+        lg, cache = step(params, toks[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    err = float(jnp.abs(dec - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert err < 3e-3, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ["phi3_mini_3p8b", "mixtral_8x22b",
+                                  "falcon_mamba_7b"])
+def test_prefill_then_decode(arch):
+    cfg = configs.get_smoke(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(2))
+    B, T, SPLIT = 2, 24, 17
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    h, _, _ = forward_hidden(params, cfg, toks)
+    ref = logits_from_hidden(params, cfg, h)
+    cache = bundle.init_cache(B, T)
+    lg, cache = jax.jit(bundle.prefill)(params, {"tokens": toks[:, :SPLIT]}, cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(ref[:, SPLIT - 1]),
+                               rtol=3e-3, atol=3e-4)
+    step = jax.jit(lambda p, tok, c, pos: bundle.decode(p, tok, c, pos, T))
+    lg2, _ = step(params, toks[:, SPLIT:SPLIT + 1], cache, jnp.int32(SPLIT))
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(ref[:, SPLIT]),
+                               rtol=3e-3, atol=3e-4)
+
+
+def test_encdec_decode_matches_teacher_forced():
+    from repro.models import encdec
+    cfg = configs.get_smoke("seamless_m4t_medium")
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(3))
+    B, T = 2, 12
+    frames = jnp.asarray(RNG.standard_normal((B, 10, cfg.d_model)), jnp.float32)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    memory = encdec.encode(params, cfg, frames)
+    ckv = encdec.cross_kv(params, cfg, memory)
+    h, _ = encdec.decode_hidden(params, cfg, toks, ckv)
+    ref = logits_from_hidden(params, cfg, h)
+    cache = encdec.init_cache(cfg, B, T, 10)
+    _, cache = jax.jit(bundle.prefill)(
+        params, {"frames": frames, "tokens": toks[:, :1]}, cache)
+    outs = [None]
+    step = jax.jit(lambda p, tok, c, pos: bundle.decode(p, tok, c, pos, T))
+    for t in range(1, T):
+        lg, cache = step(params, toks[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    for t in range(1, T):
+        np.testing.assert_allclose(np.asarray(outs[t]), np.asarray(ref[:, t]),
+                                   rtol=3e-3, atol=3e-4)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = configs.get("gemma3_1b")
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == 26
+    assert kinds[:6] == (1, 1, 1, 1, 1, 0)       # 5 local then 1 global
+    assert sum(1 for k in kinds if k == 0) == 4
+
+
+def test_zamba2_shared_sites():
+    cfg = configs.get("zamba2_1p2b")
+    sites = cfg.shared_attn_sites()
+    assert len(sites) == 38 and sum(sites) == 6
+    assert sites[5] == 1 and sites[11] == 1
+
+
+def test_vocab_padding_exact_loss():
+    """Padded logits tail must not leak into the softmax."""
+    cfg = configs.get_smoke("phi3_mini_3p8b").with_(vocab=250)  # pads to 256
+    assert cfg.vocab_padded == 256
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(4))
+    toks = jnp.asarray(RNG.integers(0, 250, (2, 9)), jnp.int32)
+    h, _, _ = forward_hidden(params, cfg, toks[:, :-1])
+    logits = logits_from_hidden(params, cfg, h)
+    assert float(logits[..., 250:].max()) < -1e29
+    loss, _ = bundle.loss(params, {"tokens": toks})
+    # manual loss over the true vocab only
+    lp = jax.nn.log_softmax(logits[..., :250], axis=-1)
+    nll = -jnp.take_along_axis(lp, toks[:, 1:][..., None], axis=-1).mean()
+    np.testing.assert_allclose(float(loss), float(nll), rtol=1e-5)

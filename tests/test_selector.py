@@ -1,0 +1,103 @@
+"""Decision tree (pure-numpy CART) + adaptive selector (paper Sec. IV)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.dtree import DecisionTree, grid_search_cv
+from repro.core.selector import (FEATURE_NAMES, Selector, extract_features,
+                                 train_selector)
+
+
+class TestDTree:
+    def test_learns_axis_aligned_rule(self):
+        rng = np.random.default_rng(0)
+        x = rng.uniform(0, 1, (400, 3))
+        y = (x[:, 1] > 0.6).astype(int)
+        t = DecisionTree(max_depth=2).fit(x, y)
+        assert t.score(x, y) > 0.98
+        assert t.nodes[0].feature == 1
+        assert abs(t.nodes[0].threshold - 0.6) < 0.05
+
+    def test_learns_conjunction(self):
+        rng = np.random.default_rng(1)
+        x = rng.uniform(0, 1, (600, 2))
+        y = ((x[:, 0] > 0.5) & (x[:, 1] > 0.5)).astype(int)
+        t = DecisionTree(max_depth=3).fit(x, y)
+        assert t.score(x, y) > 0.95
+
+    def test_class_weight_balanced(self):
+        rng = np.random.default_rng(2)
+        x = rng.uniform(0, 1, (500, 1))
+        y = (x[:, 0] > 0.95).astype(int)        # 5% positives
+        tb = DecisionTree(max_depth=3, class_weight="balanced").fit(x, y)
+        pos = x[y == 1]
+        assert tb.predict(pos).mean() > 0.9     # recalls the minority class
+
+    def test_depth_limit(self):
+        rng = np.random.default_rng(3)
+        x = rng.uniform(0, 1, (200, 2))
+        y = rng.integers(0, 2, 200)
+        t = DecisionTree(max_depth=1).fit(x, y)
+        assert t.n_nodes <= 3
+
+    def test_serialization_roundtrip(self):
+        rng = np.random.default_rng(4)
+        x = rng.uniform(0, 1, (300, 4))
+        y = (x[:, 2] > 0.3).astype(int)
+        t = DecisionTree(max_depth=4).fit(x, y)
+        t2 = DecisionTree.from_dict(json.loads(json.dumps(t.to_dict())))
+        np.testing.assert_array_equal(t.predict(x), t2.predict(x))
+
+    def test_grid_search(self):
+        rng = np.random.default_rng(5)
+        x = rng.uniform(0, 1, (300, 2))
+        y = (x[:, 0] > 0.5).astype(int)
+        tree, info = grid_search_cv(x, y, max_depths=range(1, 4), n_folds=2)
+        assert info["cv_accuracy"] > 0.9
+        assert tree.score(x, y) > 0.95
+
+
+class TestSelector:
+    def test_features_match_table1(self):
+        f = extract_features(100, 10, 5000)
+        assert len(f) == len(FEATURE_NAMES) == 10
+        assert f[0] == 100 and f[1] == 10 and f[2] == 5000
+        assert f[3] == 100 ** 2 and f[6] == 100 / 100  # R²/I = 1
+        assert np.all(np.isfinite(f))
+
+    def test_cost_model_fallback(self):
+        sel = Selector()                         # no tree
+        # huge I_n: eigh(I²) explodes → ALS must win (paper's Air tensor)
+        assert sel(i_n=30648, r_n=10, j_n=376 * 6) == "als"
+        # tiny I_n, huge J_n: Gram is one cheap pass → EIG wins
+        assert sel(i_n=6, r_n=5, j_n=30648 * 376) == "eig"
+
+    def test_cost_model_consistency(self):
+        assert cost_model.predicted_best(30648, 10, 2256) == "als"
+        assert cost_model.eig_flops(100, 10, 1000) > 0
+        assert cost_model.als_flops(100, 10, 1000) > 0
+
+    def test_train_selector_pipeline(self):
+        rng = np.random.default_rng(0)
+        feats = np.stack([extract_features(i, r, j) for i, r, j in
+                          rng.integers(2, 500, (200, 3))])
+        labels = (feats[:, 0] > 100).astype(int)   # synthetic ground truth
+        sel, info = train_selector(feats, labels)
+        assert info["test_accuracy"] > 0.9
+        assert sel(i_n=400, r_n=10, j_n=50) == "als"
+        assert sel(i_n=10, r_n=4, j_n=50) == "eig"
+
+    def test_save_load(self, tmp_path):
+        rng = np.random.default_rng(1)
+        feats = np.stack([extract_features(i, r, j) for i, r, j in
+                          rng.integers(2, 500, (100, 3))])
+        labels = (feats[:, 1] > 50).astype(int)
+        sel, _ = train_selector(feats, labels)
+        p = tmp_path / "sel.json"
+        sel.save(p)
+        sel2 = Selector.load(p)
+        for i, r, j in rng.integers(2, 500, (20, 3)):
+            assert sel(i_n=i, r_n=r, j_n=j) == sel2(i_n=i, r_n=r, j_n=j)

@@ -1,0 +1,140 @@
+"""SSM scan oracles + MoE dispatch correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import _s6_scan, _ssd_scan
+
+RNG = np.random.default_rng(0)
+
+
+class TestS6:
+    @pytest.mark.parametrize("chunk", [4, 8, 37])
+    def test_matches_naive_recurrence(self, chunk):
+        B, T, Di, N = 2, 37, 5, 4
+        x = RNG.standard_normal((B, T, Di)).astype(np.float32)
+        dt = np.abs(RNG.standard_normal((B, T, Di))).astype(np.float32) * 0.1
+        bm = RNG.standard_normal((B, T, N)).astype(np.float32)
+        cm = RNG.standard_normal((B, T, N)).astype(np.float32)
+        a = -np.abs(RNG.standard_normal((Di, N))).astype(np.float32)
+
+        h = np.zeros((B, Di, N))
+        ys = []
+        for t in range(T):
+            da = np.exp(dt[:, t][:, :, None] * a[None])
+            h = da * h + (dt[:, t] * x[:, t])[:, :, None] * bm[:, t][:, None, :]
+            ys.append(np.einsum("bn,bdn->bd", cm[:, t], h))
+        y_ref, h_ref = np.stack(ys, 1), h
+
+        y, hf = _s6_scan(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(bm),
+                         jnp.asarray(cm), jnp.asarray(a), chunk=chunk)
+        np.testing.assert_allclose(y, y_ref, atol=3e-4)
+        np.testing.assert_allclose(hf, h_ref, atol=3e-4)
+
+    def test_state_carry_across_calls(self):
+        """Chunked prefill then continued scan == one long scan."""
+        B, T, Di, N = 1, 24, 3, 2
+        x = jnp.asarray(RNG.standard_normal((B, T, Di)), jnp.float32)
+        dt = jnp.abs(jnp.asarray(RNG.standard_normal((B, T, Di)), jnp.float32)) * 0.1
+        bm = jnp.asarray(RNG.standard_normal((B, T, N)), jnp.float32)
+        cm = jnp.asarray(RNG.standard_normal((B, T, N)), jnp.float32)
+        a = -jnp.abs(jnp.asarray(RNG.standard_normal((Di, N)), jnp.float32))
+        y_full, h_full = _s6_scan(x, dt, bm, cm, a, chunk=8)
+        y1, h1 = _s6_scan(x[:, :10], dt[:, :10], bm[:, :10], cm[:, :10], a, chunk=8)
+        y2, h2 = _s6_scan(x[:, 10:], dt[:, 10:], bm[:, 10:], cm[:, 10:], a,
+                          chunk=8, h0=h1)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full, atol=2e-4)
+        np.testing.assert_allclose(h2, h_full, atol=2e-4)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("chunk", [4, 16])
+    def test_matches_naive_recurrence(self, chunk):
+        B, T, H, P, N = 2, 29, 3, 4, 5
+        x = RNG.standard_normal((B, T, H, P)).astype(np.float32)
+        dt = np.abs(RNG.standard_normal((B, T, H))).astype(np.float32) * 0.1
+        bm = RNG.standard_normal((B, T, N)).astype(np.float32)
+        cm = RNG.standard_normal((B, T, N)).astype(np.float32)
+        a = -np.abs(RNG.standard_normal((H,))).astype(np.float32)
+
+        h = np.zeros((B, H, P, N))
+        ys = []
+        for t in range(T):
+            da = np.exp(dt[:, t] * a[None])
+            h = da[:, :, None, None] * h + np.einsum(
+                "bh,bhp,bn->bhpn", dt[:, t], x[:, t], bm[:, t])
+            ys.append(np.einsum("bn,bhpn->bhp", cm[:, t], h))
+        y_ref, h_ref = np.stack(ys, 1), h
+
+        y, hf = _ssd_scan(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(bm),
+                          jnp.asarray(cm), jnp.asarray(a), chunk=chunk)
+        np.testing.assert_allclose(y, y_ref, atol=3e-4)
+        np.testing.assert_allclose(hf, h_ref, atol=3e-4)
+
+
+class TestMoE:
+    def cfg(self, **kw):
+        d = dict(d_model=32, d_ff=48, n_experts=4, top_k=2,
+                 capacity_factor=8.0, router_aux_coef=0.01)
+        d.update(kw)
+        return ModelConfig(**d)
+
+    def test_no_drop_matches_dense_reference(self):
+        """At huge capacity, sort-dispatch == dense weighted expert sum."""
+        cfg = self.cfg()
+        p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jnp.asarray(RNG.standard_normal((2, 9, 32)), jnp.float32)
+        y, aux = moe_apply(p, x, cfg)
+
+        # dense reference: run every token through all experts, weight by
+        # renormalized top-k router probs
+        logits = x.astype(jnp.float32) @ p["router"]
+        probs = jax.nn.softmax(logits, -1)
+        top_p, top_e = jax.lax.top_k(probs, 2)
+        top_p = top_p / top_p.sum(-1, keepdims=True)
+        gate = jnp.einsum("btd,edf->btef", x, p["w_gate"])
+        up = jnp.einsum("btd,edf->btef", x, p["w_up"])
+        h = jax.nn.silu(gate) * up
+        all_out = jnp.einsum("btef,efd->bted", h, p["w_down"])
+        mask = jnp.zeros((2, 9, 4)).at[
+            jnp.arange(2)[:, None, None], jnp.arange(9)[None, :, None], top_e
+        ].add(top_p)
+        want = jnp.einsum("bte,bted->btd", mask, all_out)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=2e-3, atol=2e-4)
+
+    def test_capacity_drops_bounded(self):
+        """With capacity 1.0 some tokens drop; output stays finite and the
+        kept fraction is ≥ 1/topk-ish."""
+        cfg = self.cfg(capacity_factor=1.0)
+        p = moe_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+        x = jnp.asarray(RNG.standard_normal((1, 64, 32)), jnp.float32)
+        y, aux = moe_apply(p, x, cfg)
+        assert bool(jnp.isfinite(y).all())
+        nz = float((jnp.abs(y).sum(-1) > 0).mean())
+        assert nz > 0.5
+
+    def test_aux_loss_range(self):
+        cfg = self.cfg()
+        p = moe_init(jax.random.PRNGKey(2), cfg, jnp.float32)
+        x = jnp.asarray(RNG.standard_normal((2, 33, 32)), jnp.float32)
+        _, aux = moe_apply(p, x, cfg)
+        # Switch aux ≈ coef when perfectly balanced; bounded by coef·E
+        assert 0 < float(aux) < cfg.router_aux_coef * cfg.n_experts
+
+    def test_router_grads_nonzero(self):
+        cfg = self.cfg()
+        p = moe_init(jax.random.PRNGKey(3), cfg, jnp.float32)
+        x = jnp.asarray(RNG.standard_normal((2, 9, 32)), jnp.float32)
+
+        def loss(p_):
+            y, aux = moe_apply(p_, x, cfg)
+            return (y ** 2).mean() + aux
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.abs(g["router"]).sum()) > 0
+        assert float(jnp.abs(g["w_down"]).sum()) > 0

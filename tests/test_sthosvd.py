@@ -1,0 +1,139 @@
+"""st-HOSVD solver correctness: exact recovery, error parity, flexibility."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALS, EIG, SVD, sthosvd, sthosvd_als, sthosvd_eig,
+                        sthosvd_svd, tensor_ops as T)
+from repro.core.solvers import als_solve, eig_solve, svd_solve
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def lowrank(dims, ranks, seed=0, noise=0.0):
+    """noise is RELATIVE to the signal's per-element RMS, so the achievable
+    rel-error at the true ranks is ≈ noise."""
+    rng = np.random.default_rng(seed)
+    core = rng.standard_normal(ranks)
+    us = [np.linalg.qr(rng.standard_normal((d, r)))[0]
+          for d, r in zip(dims, ranks)]
+    x = T.reconstruct(jnp.asarray(core, jnp.float32),
+                      [jnp.asarray(u, jnp.float32) for u in us])
+    if noise:
+        rms = float(jnp.sqrt(jnp.mean(x ** 2)))
+        x = x + noise * rms * jnp.asarray(rng.standard_normal(dims), jnp.float32)
+    return x
+
+
+class TestExactRecovery:
+    @pytest.mark.parametrize("fn", [sthosvd_eig, sthosvd_als, sthosvd_svd])
+    def test_exact_lowrank(self, fn):
+        x = lowrank((12, 15, 10), (3, 4, 2))
+        res = fn(x, (3, 4, 2))
+        assert float(res.tucker.rel_error(x)) < 1e-4
+
+    @given(seed=st.integers(0, 20))
+    def test_eig_als_parity_on_noisy(self, seed):
+        x = lowrank((10, 12, 8), (2, 3, 2), seed=seed, noise=0.05)
+        e1 = float(sthosvd_eig(x, (2, 3, 2)).tucker.rel_error(x))
+        e2 = float(sthosvd_als(x, (2, 3, 2)).tucker.rel_error(x))
+        # paper Table III: accuracies agree to ~1e-3 relative
+        assert abs(e1 - e2) < 2e-2 + 0.15 * max(e1, e2)
+
+    def test_4th_order(self):
+        x = lowrank((6, 7, 8, 5), (2, 3, 2, 2))
+        res = sthosvd(x, (2, 3, 2, 2), methods="eig")
+        assert float(res.tucker.rel_error(x)) < 1e-4
+
+
+class TestFactors:
+    @pytest.mark.parametrize("method", [EIG, ALS, SVD])
+    def test_orthonormal_factors(self, method):
+        x = lowrank((10, 12, 8), (3, 4, 2), noise=0.1)
+        res = sthosvd(x, (3, 4, 2), methods=method)
+        for u in res.tucker.factors:
+            g = np.asarray(u.T @ u)
+            np.testing.assert_allclose(g, np.eye(g.shape[0]), atol=2e-3)
+
+    def test_error_decreases_with_rank(self):
+        x = lowrank((12, 12, 12), (6, 6, 6), noise=0.2)
+        errs = [float(sthosvd_eig(x, (r, r, r)).tucker.rel_error(x))
+                for r in (1, 3, 6, 9)]
+        assert all(errs[i] >= errs[i + 1] - 1e-6 for i in range(3))
+
+
+class TestFlexible:
+    def test_modewise_schedule(self):
+        x = lowrank((10, 12, 8), (3, 4, 2), noise=0.05)
+        res = sthosvd(x, (3, 4, 2), methods=("eig", "als", "eig"))
+        assert res.methods == ("eig", "als", "eig")
+        assert float(res.tucker.rel_error(x)) < 0.12
+
+    def test_auto_uses_selector(self):
+        calls = []
+
+        def sel(*, i_n, r_n, j_n):
+            calls.append((i_n, r_n, j_n))
+            return "eig"
+
+        x = lowrank((10, 12, 8), (3, 4, 2))
+        res = sthosvd(x, (3, 4, 2), methods="auto", selector=sel)
+        assert len(calls) == 3
+        assert res.methods == ("eig", "eig", "eig")
+        # J_n shrinks as earlier modes are truncated (st-HOSVD property)
+        assert calls[1][2] == 3 * 8          # after mode-0 shrink to 3
+        assert calls[2][2] == 3 * 4
+
+    def test_mode_order_shrink(self):
+        x = lowrank((20, 6, 8), (2, 3, 2), noise=0.01)
+        res = sthosvd(x, (2, 3, 2), methods="eig", mode_order="shrink")
+        assert {t.mode for t in res.trace} == {0, 1, 2}
+        assert res.trace[0].mode == 0        # biggest shrink ratio first
+        assert float(res.tucker.rel_error(x)) < 0.05
+
+    def test_explicit_impl_parity(self):
+        x = lowrank((9, 10, 8), (3, 3, 3), noise=0.02)
+        a = sthosvd(x, (3, 3, 3), methods="eig", impl="matfree")
+        b = sthosvd(x, (3, 3, 3), methods="eig", impl="explicit")
+        np.testing.assert_allclose(float(a.tucker.rel_error(x)),
+                                   float(b.tucker.rel_error(x)), atol=1e-5)
+
+    def test_compression_ratio(self):
+        x = lowrank((20, 20, 20), (4, 4, 4))
+        tt = sthosvd_eig(x, (4, 4, 4)).tucker
+        assert tt.ranks == (4, 4, 4)
+        expected = 8000 / (64 + 3 * 80)
+        assert abs(tt.compression_ratio - expected) < 1e-6
+
+    def test_validation_errors(self):
+        x = lowrank((5, 6, 7), (2, 2, 2))
+        with pytest.raises(ValueError):
+            sthosvd(x, (2, 2))
+        with pytest.raises(ValueError):
+            sthosvd(x, (2, 9, 2))
+        with pytest.raises(ValueError):
+            sthosvd(x, (2, 2, 2), methods=("eig",))
+
+
+class TestSolversDirect:
+    @given(mode=st.integers(0, 2), seed=st.integers(0, 5))
+    def test_eig_vs_svd_subspace(self, mode, seed):
+        x = lowrank((8, 9, 10), (3, 3, 3), seed=seed, noise=0.01)
+        ue = eig_solve(x, mode, 3).u
+        us = svd_solve(x, mode, 3).u
+        pe, ps = np.asarray(ue @ ue.T), np.asarray(us @ us.T)
+        np.testing.assert_allclose(pe, ps, atol=5e-2)
+
+    def test_als_iterations_converge(self):
+        x = lowrank((10, 11, 9), (3, 3, 3), noise=0.02)
+        errs = []
+        for it in (1, 3, 8):
+            u, y = als_solve(x, 0, 3, num_iters=it)
+            # residual of the rank-3 mode-0 approximation
+            xa = T.ttm(y, u, 0)
+            errs.append(float(T.fro_norm(x - xa) / T.fro_norm(x)))
+        assert errs[-1] <= errs[0] + 1e-5

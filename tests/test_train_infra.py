@@ -1,0 +1,193 @@
+"""Trainer infrastructure: optimizer, microbatching, checkpoint, data, serve."""
+
+import json
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, make_source
+from repro.models import build
+from repro.models.config import ShapeConfig
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.grad_compress import CompressionConfig
+from repro.train.train_step import _accumulate_grads, init_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+RNG = np.random.default_rng(0)
+
+
+class TestAdamW:
+    def test_matches_numpy_reference(self):
+        opt = AdamW(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                    clip_norm=None)
+        p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+        g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+        st = opt.init(p)
+        p1, st, _ = opt.update(g, st, p)
+        gn = np.asarray(g["w"])
+        m = 0.1 * gn
+        v = 0.01 * gn * gn
+        mh, vh = m / 0.1, v / 0.01
+        want = np.asarray(p["w"]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+        np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+
+    def test_weight_decay_skips_1d(self):
+        opt = AdamW(lr=0.1, weight_decay=0.5, clip_norm=None)
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+        st = opt.init(p)
+        p1, _, _ = opt.update(g, st, p)
+        assert float(jnp.abs(p1["b"] - 1.0).max()) < 1e-6       # no decay
+        assert float(p1["w"].max()) < 1.0                        # decayed
+
+    def test_clipping(self):
+        opt = AdamW(lr=0.0, clip_norm=1.0)
+        g = {"w": jnp.full((10,), 100.0)}
+        st = opt.init(g)
+        _, _, m = opt.update(g, st, {"w": jnp.zeros((10,))})
+        assert m["grad_norm"] > 100
+
+    def test_cosine_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+        assert float(lr(jnp.int32(5))) == pytest.approx(0.5)
+        assert float(lr(jnp.int32(10))) == pytest.approx(1.0, abs=0.02)
+        assert float(lr(jnp.int32(100))) == pytest.approx(0.1, abs=0.02)
+
+
+class TestMicrobatching:
+    def test_grad_accumulation_equivalence(self):
+        cfg = configs.get_smoke("phi3_mini_3p8b").with_(n_layers=2, remat=False)
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (8, 17)), jnp.int32)}
+        g1, m1 = _accumulate_grads(bundle.loss, params, batch, 1)
+        g4, m4 = _accumulate_grads(bundle.loss, params, batch, 4)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+        err = max(float(jnp.abs(a - b).max()) for a, b in
+                  zip(jax.tree.leaves(g1), jax.tree.leaves(g4)))
+        assert err < 1e-4
+
+
+class TestCheckpointer:
+    def test_roundtrip_and_gc(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        for step in (5, 10, 15):
+            ck.save(step, jax.tree.map(lambda x: x + step, tree), blocking=True)
+        assert ck.all_steps() == [10, 15]       # keep=2 gc'd step 5
+        restored, step = ck.restore(tree)
+        assert step == 15
+        np.testing.assert_allclose(np.asarray(restored["a"]),
+                                   np.asarray(tree["a"]) + 15)
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_ignores_uncommitted_tmp(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(3, {"x": jnp.ones(3)}, blocking=True)
+        (tmp_path / "step_000000009.tmp").mkdir()   # simulated crash
+        assert ck.latest_step() == 3
+
+    def test_tucker_compressed_tier(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        comp = CompressionConfig(rank_fraction=0.5, min_size=10, min_ndim=3,
+                                 skip_first_mode=False)
+        rng = np.random.default_rng(1)
+        core = rng.standard_normal((3, 3, 3))
+        us = [np.linalg.qr(rng.standard_normal((12, 3)))[0] for _ in range(3)]
+        w = jnp.asarray(np.einsum("abc,ia,jb,kc->ijk", core, *us), jnp.float32)
+        tree = {"w": w, "small": jnp.ones((4,))}
+        ck.save(1, tree, compress_cfg=comp, blocking=True)
+        meta = json.loads((tmp_path / "step_000000001" / "meta.json").read_text())
+        kinds = {l["kind"] for l in meta["leaves"]}
+        assert kinds == {"tucker", "raw"}
+        restored, _ = ck.restore(tree, step=1)
+        err = float(jnp.linalg.norm(restored["w"] - w) / jnp.linalg.norm(w))
+        assert err < 1e-4                        # exactly low-rank → lossless
+
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        cfg = configs.get_smoke("phi3_mini_3p8b")
+        shape = ShapeConfig("t", 16, 4, "train")
+        a = make_source(DataConfig(seed=3), cfg, shape)
+        b = make_source(DataConfig(seed=3), cfg, shape)
+        np.testing.assert_array_equal(np.asarray(a.batch_at(7)["tokens"]),
+                                      np.asarray(b.batch_at(7)["tokens"]))
+        assert not np.array_equal(np.asarray(a.batch_at(7)["tokens"]),
+                                  np.asarray(a.batch_at(8)["tokens"]))
+
+    def test_elastic_reslice(self):
+        """A different shard count re-derives slices of the SAME global batch."""
+        cfg = configs.get_smoke("phi3_mini_3p8b")
+        shape = ShapeConfig("t", 16, 8, "train")
+        src = make_source(DataConfig(seed=0), cfg, shape)
+        g = np.asarray(src.batch_at(3)["tokens"])
+        for n_shards in (2, 4):
+            per = 8 // n_shards
+            slices = [g[i * per:(i + 1) * per] for i in range(n_shards)]
+            np.testing.assert_array_equal(np.concatenate(slices), g)
+
+
+class TestTrainerLoop:
+    def test_loss_decreases_and_resumes(self, tmp_path):
+        cfg = configs.get_smoke("phi3_mini_3p8b").with_(n_layers=2, remat=False)
+        bundle = build(cfg)
+        shape = ShapeConfig("t", 32, 8, "train")
+        src = make_source(DataConfig(seed=0), cfg, shape)
+        opt = AdamW(lr=1e-3, weight_decay=0.0)
+        step = make_train_step(bundle, opt)
+        tc = TrainerConfig(total_steps=20, ckpt_every=10, log_every=5,
+                           ckpt_dir=str(tmp_path))
+        tr = Trainer(tc, step, init_state(bundle, opt, jax.random.PRNGKey(0)), src)
+        hist = tr.run()
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+        # resume continues from 20 (restored), runs to 25
+        tc2 = TrainerConfig(total_steps=25, ckpt_every=10, log_every=5,
+                            ckpt_dir=str(tmp_path))
+        tr2 = Trainer(tc2, step, init_state(bundle, opt, jax.random.PRNGKey(0)), src)
+        tr2.run()
+        assert int(np.asarray(tr2.state.step)) == 25
+
+
+class TestServeEngine:
+    def test_batched_requests_complete(self):
+        from repro.serve.engine import Request, ServeEngine
+        cfg = configs.get_smoke("phi3_mini_3p8b").with_(n_layers=2)
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(bundle, params, batch_slots=2, max_len=48)
+        reqs = [Request(prompt=[1 + i, 2, 3], max_new_tokens=6, rid=i)
+                for i in range(5)]
+        outs = eng.run(reqs)
+        assert all(len(r.output) >= 6 for r in outs)
+        assert all(r.done for r in outs)
+
+    def test_engine_matches_manual_decode(self):
+        from repro.serve.engine import Request, ServeEngine
+        cfg = configs.get_smoke("phi3_mini_3p8b").with_(n_layers=2)
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        prompt = [5, 7, 9, 11]
+        eng = ServeEngine(bundle, params, batch_slots=1, max_len=32)
+        out = eng.run([Request(prompt=prompt, max_new_tokens=5)])[0].output
+
+        # manual greedy decode
+        cache = bundle.init_cache(1, 32)
+        lg, cache = jax.jit(bundle.prefill)(
+            params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cache)
+        toks = [int(jnp.argmax(lg[0, -1]))]
+        pos = len(prompt)
+        step = jax.jit(lambda p, tok, c, q: bundle.decode(p, tok, c, q, 32))
+        for _ in range(4):
+            lg, cache = step(params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+                             jnp.asarray([pos], jnp.int32))
+            toks.append(int(jnp.argmax(lg[0, 0])))
+            pos += 1
+        assert out == toks

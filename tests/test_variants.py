@@ -1,0 +1,60 @@
+"""t-HOSVD and HOOI variants (paper §II-B / future-work §VIII)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sthosvd_eig, tensor_ops as T
+from repro.core.variants import hooi, thosvd
+
+
+def lowrank(dims, ranks, seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    core = rng.standard_normal(ranks)
+    us = [np.linalg.qr(rng.standard_normal((d, r)))[0]
+          for d, r in zip(dims, ranks)]
+    x = T.reconstruct(jnp.asarray(core, jnp.float32),
+                      [jnp.asarray(u, jnp.float32) for u in us])
+    if noise:
+        rms = float(jnp.sqrt(jnp.mean(x ** 2)))
+        x = x + noise * rms * jnp.asarray(rng.standard_normal(dims), jnp.float32)
+    return x
+
+
+class TestTHOSVD:
+    @pytest.mark.parametrize("methods", ["eig", "als"])
+    def test_exact_recovery(self, methods):
+        x = lowrank((12, 10, 8), (3, 3, 2))
+        res = thosvd(x, (3, 3, 2), methods=methods)
+        assert float(res.tucker.rel_error(x)) < 1e-4
+
+    def test_orthonormal_and_auto(self):
+        x = lowrank((12, 10, 8), (3, 3, 2), noise=0.05)
+        res = thosvd(x, (3, 3, 2), methods="auto")
+        for u in res.tucker.factors:
+            np.testing.assert_allclose(np.asarray(u.T @ u),
+                                       np.eye(u.shape[1]), atol=2e-3)
+        assert float(res.tucker.rel_error(x)) < 0.12
+
+
+class TestHOOI:
+    def test_refines_sthosvd(self):
+        """HOOI error ≤ its st-HOSVD init error (monotone refinement)."""
+        x = lowrank((14, 12, 10), (3, 3, 3), noise=0.3)
+        init = sthosvd_eig(x, (3, 3, 3))
+        e0 = float(init.tucker.rel_error(x))
+        res = hooi(x, (3, 3, 3), n_iters=2, methods="eig", init=init)
+        e1 = float(res.tucker.rel_error(x))
+        assert e1 <= e0 + 1e-5
+
+    def test_exact_recovery(self):
+        x = lowrank((10, 9, 8), (2, 3, 2))
+        res = hooi(x, (2, 3, 2), n_iters=1, methods="eig")
+        assert float(res.tucker.rel_error(x)) < 1e-4
+
+    def test_auto_selector_runs(self):
+        x = lowrank((10, 9, 8), (2, 3, 2), noise=0.05)
+        res = hooi(x, (2, 3, 2), n_iters=1, methods="auto")
+        assert float(res.tucker.rel_error(x)) < 0.12
+        assert len(res.trace) == 3 + 3     # init sweep + 1 HOOI sweep
