@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (sthosvd, sthosvd_als, sthosvd_eig, sthosvd_svd,
-                        default_selector)
+from repro.core import (TuckerConfig, plan, sthosvd, sthosvd_als, sthosvd_eig,
+                        sthosvd_svd, default_selector)
 from repro.core.selector import collect_samples, train_selector
 
 from .common import emit, lowrank_tensor, scaled, time_call
@@ -79,6 +79,16 @@ def table3_realworld(full: bool = False, factor: float = 0.18):
             err = float(fn(x, r).tucker.rel_error(x))
             row[mname] = (t, err)
             emit(f"table3/{mname}/{name}", t, f"err={err:.4f}")
+        # beyond-paper row: the same adaptive schedule through the
+        # plan/execute front door (selector amortized, cached whole-sweep
+        # program) — emitted under its own key so the paper's per-call rows
+        # keep their methodology
+        p = plan(x.shape, x.dtype, TuckerConfig(ranks=r, methods="auto"))
+        t_planned = time_call(
+            lambda: jax.block_until_ready(p.execute(x).tucker.core),
+            reps=2, warmup=1)
+        emit(f"table3/atucker_planned/{name}", t_planned,
+             f"speedup_vs_percall=x{row['atucker'][0] / t_planned:.2f}")
         out[name] = row
         # paper claim: a-Tucker accuracy matches baselines per tensor
         errs = [v[1] for v in row.values()]
@@ -101,7 +111,7 @@ def table3_realworld(full: bool = False, factor: float = 0.18):
 def fig5_adaptive_speedup(n_tensors: int = 20, max_dim: int = 200, seed=0):
     rng = np.random.default_rng(seed)
     sel = default_selector()
-    wins, speed_eig, speed_als = 0, [], []
+    wins, speed_eig, speed_als, speed_plan = 0, [], [], []
     for i in range(n_tensors):
         dims = tuple(int(np.exp(rng.uniform(np.log(12), np.log(max_dim))))
                      for _ in range(3))
@@ -112,6 +122,11 @@ def fig5_adaptive_speedup(n_tensors: int = 20, max_dim: int = 200, seed=0):
         ta = time_call(lambda: sthosvd_als(x, ranks, block_until_ready=True), reps=2)
         tad = time_call(lambda: sthosvd(x, ranks, methods="auto", selector=sel,
                                         block_until_ready=True), reps=2)
+        # beyond-paper: the same adaptive schedule via plan/execute (selector
+        # out of the hot path) — tracked separately from the paper metric
+        p = plan(x.shape, x.dtype, TuckerConfig(ranks=ranks), selector=sel)
+        speed_plan.append(tad / time_call(
+            lambda: jax.block_until_ready(p.execute(x).tucker.core), reps=2))
         if tad <= min(te, ta) * 1.1:
             wins += 1
         speed_eig.append(te / tad)
@@ -120,8 +135,11 @@ def fig5_adaptive_speedup(n_tensors: int = 20, max_dim: int = 200, seed=0):
     emit("fig5/adaptive_win_fraction", 0.0, f"frac={frac:.2f}")
     emit("fig5/mean_speedup_vs_eig", 0.0, f"x{np.mean(speed_eig):.2f}")
     emit("fig5/mean_speedup_vs_als", 0.0, f"x{np.mean(speed_als):.2f}")
+    emit("fig5/mean_speedup_planned_vs_percall", 0.0,
+         f"x{np.mean(speed_plan):.2f}")
     return {"win_fraction": frac, "speedup_eig": float(np.mean(speed_eig)),
-            "speedup_als": float(np.mean(speed_als))}
+            "speedup_als": float(np.mean(speed_als)),
+            "speedup_planned": float(np.mean(speed_plan))}
 
 
 # ---------------------------------------------------------------------------

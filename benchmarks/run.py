@@ -24,6 +24,7 @@ def main() -> None:
         "fig7": lambda: pf.fig7_selector_overhead(),
         "fig8": lambda: pf.fig8_matfree(full=args.full),
         "selector": lambda: pf.selector_accuracy(),
+        "plan": sb.plan_bench,
         "kernels": sb.kernels_bench,
         "grad_compress": sb.grad_compress_bench,
         "tiny_train": sb.tiny_train_bench,

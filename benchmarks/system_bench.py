@@ -1,6 +1,7 @@
-"""System-level benchmarks beyond the paper's figures: Pallas kernel roofline
-characterization, Tucker gradient-compression wire savings, and tiny-train
-throughput (the end-to-end driver measured)."""
+"""System-level benchmarks beyond the paper's figures: plan-reuse vs per-call
+decomposition, Pallas kernel roofline characterization, Tucker
+gradient-compression wire savings, and tiny-train throughput (the end-to-end
+driver measured)."""
 
 from __future__ import annotations
 
@@ -15,7 +16,49 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.optim.grad_compress import CompressionConfig, compressed_bytes
 
-from .common import emit, time_call
+from .common import emit, lowrank_tensor, time_call
+
+
+def plan_bench(n_repeat: int = 8, batch: int = 8):
+    """Plan/execute vs legacy per-call API (the tentpole's amortization claim).
+
+    Three regimes per shape:
+      * percall  — legacy ``sthosvd(x, ranks, methods="auto")``: selector +
+        Python dispatch inside every call.
+      * plan     — ``plan()`` once, then repeated ``execute``: frozen schedule,
+        one cached compiled sweep.
+      * batch    — ``execute_batch`` on a fleet of ``batch`` same-shaped
+        tensors vs the per-item ``execute`` loop.
+    """
+    from repro.core import TuckerConfig, plan, sthosvd
+
+    cases = [((96, 64, 48), (8, 8, 8)), ((256, 24, 24), (8, 6, 6))]
+    for dims, ranks in cases:
+        tag = "x".join(map(str, dims))
+        x = lowrank_tensor(dims, ranks, noise=0.05)
+        cfg = TuckerConfig(ranks=ranks, methods="auto")
+        p = plan(x.shape, x.dtype, cfg)
+
+        t_percall = time_call(
+            lambda: sthosvd(x, ranks, methods="auto", block_until_ready=True),
+            reps=n_repeat)
+        t_plan = time_call(
+            lambda: jax.block_until_ready(p.execute(x).tucker.core),
+            reps=n_repeat)
+        emit(f"plan/{tag}/percall", t_percall, f"ranks={ranks}")
+        emit(f"plan/{tag}/execute", t_plan,
+             f"speedup=x{t_percall / t_plan:.2f};schedule={'|'.join(p.methods)}")
+
+        xs = jnp.stack([lowrank_tensor(dims, ranks, noise=0.05, seed=s)
+                        for s in range(batch)])
+        t_loop = time_call(
+            lambda: [jax.block_until_ready(p.execute(xs[b]).tucker.core)
+                     for b in range(batch)], reps=2)
+        t_batch = time_call(
+            lambda: jax.block_until_ready(p.execute_batch(xs)[0].tucker.core),
+            reps=2)
+        emit(f"plan/{tag}/batch{batch}", t_batch,
+             f"loop={t_loop * 1e6:.1f}us;speedup=x{t_loop / t_batch:.2f}")
 
 
 def kernels_bench():

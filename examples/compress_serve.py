@@ -2,17 +2,19 @@
 
     PYTHONPATH=src python examples/compress_serve.py
 
-Trains a tiny LM briefly, Tucker-compresses its stacked MLP weights with the
-adaptive st-HOSVD (solver chosen per mode by the selector), reconstructs, and
-serves the same prompts from both models — reporting compression ratio,
-weight reconstruction error, and generation agreement.
+Trains a tiny LM briefly, Tucker-compresses its stacked MLP weights through
+the plan/execute front door (one ``TuckerPlan`` per distinct weight-stack
+shape — the adaptive selector and sweep compilation are amortized across
+same-shaped stacks), reconstructs, and serves the same prompts from both
+models — reporting compression ratio, weight reconstruction error, and
+generation agreement.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sthosvd
+from repro.core import TuckerConfig, plan
 from repro.data.pipeline import DataConfig, make_source
 from repro.models import build
 from repro.models.config import ModelConfig, ShapeConfig
@@ -22,8 +24,14 @@ from repro.train.train_step import init_state, make_train_step
 
 
 def tucker_compress_params(params, rank_fraction=0.5, min_size=1 << 12):
-    """st-HOSVD on every ≥3-D weight stack; returns (params', report)."""
+    """st-HOSVD on every ≥3-D weight stack; returns (params', report).
+
+    Plans are cached per (shape, ranks): weight stacks sharing a shape (all
+    layers' QKV, all layers' MLP, …) reuse one resolved schedule and one
+    compiled sweep instead of re-selecting per leaf.
+    """
     report = []
+    plans = {}
 
     def one(path, leaf):
         if leaf.ndim < 3 or leaf.size < min_size or \
@@ -31,11 +39,17 @@ def tucker_compress_params(params, rank_fraction=0.5, min_size=1 << 12):
             return leaf
         ranks = tuple(max(1, int(d * rank_fraction)) if i else d
                       for i, d in enumerate(leaf.shape))   # keep layer mode
-        res = sthosvd(leaf.astype(jnp.float32), ranks, methods="auto")
+        key = (leaf.shape, ranks)
+        if key not in plans:
+            plans[key] = plan(leaf.shape, jnp.float32,
+                              TuckerConfig(ranks=ranks, methods="auto",
+                                           compute_dtype="float32"))
+        p = plans[key]
+        res = p.execute(leaf.astype(jnp.float32))
         tt = res.tucker
         err = float(tt.rel_error(leaf.astype(jnp.float32)))
         report.append((jax.tree_util.keystr(path), leaf.shape, ranks,
-                       tt.compression_ratio, err, res.methods))
+                       tt.compression_ratio, err, p.methods))
         return tt.reconstruct().astype(leaf.dtype)
 
     out = jax.tree_util.tree_map_with_path(one, params)
@@ -57,8 +71,10 @@ def main():
         state, m = step(state, src.batch_at(t))
     print(f"  final loss {float(m['loss']):.3f}")
 
-    print("\nTucker-compressing ≥3-D weight stacks (adaptive st-HOSVD)…")
+    print("\nTucker-compressing ≥3-D weight stacks (planned adaptive st-HOSVD)…")
     cparams, report = tucker_compress_params(state.params)
+    n_shapes = len({(shp, rk) for _, shp, rk, *_ in report})
+    print(f"  {len(report)} stacks compressed via {n_shapes} cached plan(s)")
     for path, shp, ranks, ratio, err, methods in report:
         print(f"  {path:40s} {str(shp):>18s} → ranks {ranks} "
               f"x{ratio:.1f} err={err:.3f} solvers={methods}")

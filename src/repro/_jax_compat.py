@@ -1,0 +1,31 @@
+"""Compatibility patches for older JAX releases.
+
+The codebase targets the current ``jax.shard_map`` API (top-level export,
+``axis_names=`` to scope manual axes, ``check_vma=``).  On releases where
+shard_map still lives in ``jax.experimental.shard_map`` (≤ 0.4.x) this module
+installs an adapter under ``jax.shard_map``:
+
+  * ``axis_names={...}``  → ``auto = mesh.axis_names - axis_names`` (the old
+    complement parameter)
+  * ``check_vma=``        → ``check_rep=``
+
+Imported for its side effect from ``repro/__init__``; a no-op on new JAX.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "shard_map"):  # pragma: no branch - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, check_rep=None, **kwargs):
+        if axis_names is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if check_rep is None:
+            check_rep = True if check_vma is None else check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep, **kwargs)
+
+    jax.shard_map = shard_map

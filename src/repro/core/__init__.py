@@ -1,13 +1,22 @@
 """a-Tucker core: input-adaptive, matricization-free Tucker decomposition.
 
 Public API:
+  TuckerConfig / plan / TuckerPlan / decompose — plan/execute front door
+      (static solver schedules, cached jitted sweeps, batched execution)
   sthosvd / sthosvd_eig / sthosvd_als / sthosvd_svd — flexible st-HOSVD
+      (legacy per-call wrappers over the same schedule runner)
   TuckerTensor — decomposition result (reconstruct, rel_error, ratio)
   Selector / default_selector / train_and_save — adaptive solver selector
   tensor_ops — matricization-free TTM/TTT/Gram (+ explicit baselines)
 """
 
-from . import cost_model, tensor_ops, variants
+# NOTE: the attribute ``repro.core.plan`` is the api.plan FUNCTION (the
+# front-door entry point), which shadows the ``plan`` submodule on the
+# package.  ``from repro.core.plan import ...`` still resolves the module
+# (sys.modules), and ``plan_lib`` aliases it for attribute-style access.
+from . import cost_model, plan as plan_lib, tensor_ops, variants
+from .api import TuckerConfig, TuckerPlan, decompose, plan
+from .plan import ModeStep, resolve_schedule
 from .selector import Selector, default_selector, extract_features
 from .solvers import ALS, EIG, SVD, als_solve, eig_solve, svd_solve
 from .sthosvd import (
@@ -21,8 +30,10 @@ from .sthosvd import (
 
 __all__ = [
     "ALS", "EIG", "SVD",
-    "Selector", "SthosvdResult", "TuckerTensor",
-    "als_solve", "cost_model", "default_selector", "eig_solve",
-    "extract_features", "sthosvd", "sthosvd_als", "sthosvd_eig",
-    "sthosvd_svd", "svd_solve", "tensor_ops", "variants",
+    "ModeStep", "Selector", "SthosvdResult",
+    "TuckerConfig", "TuckerPlan", "TuckerTensor",
+    "als_solve", "cost_model", "decompose", "default_selector", "eig_solve",
+    "extract_features", "plan", "plan_lib", "resolve_schedule", "sthosvd",
+    "sthosvd_als", "sthosvd_eig", "sthosvd_svd", "svd_solve", "tensor_ops",
+    "variants",
 ]

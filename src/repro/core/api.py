@@ -1,0 +1,307 @@
+"""Plan/execute front door for a-Tucker: ``TuckerConfig`` → ``TuckerPlan``.
+
+The legacy entry points (`sthosvd` & friends) re-run the adaptive selector
+and re-dispatch solvers inside every call.  Following the plan/execute split
+of randomized-Tucker systems that precompute their sketch/solve schedules,
+this module moves ALL input-adaptive decisions to a one-time ``plan`` step:
+
+    cfg  = TuckerConfig(ranks=(10, 10, 5), methods="auto")
+    p    = plan(x.shape, x.dtype, cfg)     # selector runs here, never again
+    res  = p.execute(x)                    # ONE cached jitted program
+    ress = p.execute_batch(xs)             # same program, vmapped over axis 0
+
+Because the per-mode solver schedule and mode order are frozen in the plan,
+the entire sweep traces as a single XLA program, cached process-wide by
+``(shape, dtype, schedule, variant, impl, als_iters, compute_dtype)`` — so
+repeated executes on same-shaped inputs cost zero recompiles and zero
+selector invocations.  Plans are JSON-serializable (``save``/``load``,
+mirroring ``Selector.save``) so a schedule tuned on one box can ship to
+another.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .plan import (
+    ModeStep,
+    TimedSelector,
+    VARIANTS,
+    resolve_schedule,
+    sweep_hooi,
+    sweep_sthosvd,
+    sweep_thosvd,
+)
+from .solvers import DEFAULT_ALS_ITERS
+from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor
+
+PLAN_FORMAT_VERSION = 1
+
+_IMPLS = ("matfree", "explicit")
+
+
+@dataclass(frozen=True)
+class TuckerConfig:
+    """Frozen description of a Tucker decomposition job (the *what*).
+
+    ``plan()`` turns it plus a concrete (shape, dtype) into a ``TuckerPlan``
+    (the *how*): per-mode solvers resolved, costs estimated, sweep compiled.
+
+    compute_dtype is the precision policy: inputs are cast to it before the
+    sweep (e.g. "float32" to decompose bf16 weights at full precision); the
+    default ``None`` keeps the input dtype.
+    """
+    ranks: tuple[int, ...]
+    variant: str = "sthosvd"
+    methods: str | tuple[str, ...] = "auto"
+    mode_order: tuple[int, ...] | str | None = None
+    impl: str = "matfree"
+    als_iters: int = DEFAULT_ALS_ITERS
+    hooi_iters: int = 3
+    compute_dtype: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "ranks", tuple(int(r) for r in self.ranks))
+        if not isinstance(self.methods, str):
+            object.__setattr__(self, "methods", tuple(self.methods))
+        if isinstance(self.mode_order, (list, tuple)):
+            object.__setattr__(self, "mode_order",
+                               tuple(int(m) for m in self.mode_order))
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}; "
+                             f"expected one of {VARIANTS}")
+        if self.impl not in _IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; expected {_IMPLS}")
+        if self.als_iters < 1 or self.hooi_iters < 0:
+            raise ValueError("als_iters must be ≥1 and hooi_iters ≥0")
+
+    def to_dict(self) -> dict:
+        return {"ranks": list(self.ranks), "variant": self.variant,
+                "methods": (self.methods if isinstance(self.methods, str)
+                            else list(self.methods)),
+                "mode_order": (list(self.mode_order)
+                               if isinstance(self.mode_order, tuple)
+                               else self.mode_order),
+                "impl": self.impl, "als_iters": self.als_iters,
+                "hooi_iters": self.hooi_iters,
+                "compute_dtype": self.compute_dtype}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuckerConfig":
+        return cls(ranks=tuple(d["ranks"]), variant=d.get("variant", "sthosvd"),
+                   methods=(d["methods"] if isinstance(d["methods"], str)
+                            else tuple(d["methods"])),
+                   mode_order=(tuple(d["mode_order"])
+                               if isinstance(d.get("mode_order"), list)
+                               else d.get("mode_order")),
+                   impl=d.get("impl", "matfree"),
+                   als_iters=d.get("als_iters", DEFAULT_ALS_ITERS),
+                   hooi_iters=d.get("hooi_iters", 3),
+                   compute_dtype=d.get("compute_dtype"))
+
+
+# ---------------------------------------------------------------------------
+# Process-wide compiled-sweep cache
+# ---------------------------------------------------------------------------
+
+_SWEEP_CACHE: dict[tuple, Callable] = {}
+
+#: builds = new jitted programs constructed; hits = cache reuses;
+#: traces = times a sweep body actually traced (== XLA compilations).
+CACHE_STATS = {"builds": 0, "hits": 0, "traces": 0}
+
+
+def clear_sweep_cache() -> None:
+    _SWEEP_CACHE.clear()
+    CACHE_STATS.update(builds=0, hits=0, traces=0)
+
+
+def _make_sweep(p: "TuckerPlan", batched: bool) -> Callable:
+    steps = p.schedule
+    cfg = p.config
+    n_init = len(p.shape)  # HOOI: first full sweep is the st-HOSVD init
+    cdtype = jnp.dtype(cfg.compute_dtype) if cfg.compute_dtype else None
+
+    def sweep(x):
+        CACHE_STATS["traces"] += 1
+        if cdtype is not None:
+            x = x.astype(cdtype)
+        if cfg.variant == "sthosvd":
+            return sweep_sthosvd(x, steps, als_iters=cfg.als_iters,
+                                 impl=cfg.impl)
+        if cfg.variant == "thosvd":
+            return sweep_thosvd(x, steps, als_iters=cfg.als_iters,
+                                impl=cfg.impl)
+        return sweep_hooi(x, steps, als_iters=cfg.als_iters, impl=cfg.impl,
+                          n_init=n_init)
+
+    return jax.jit(jax.vmap(sweep) if batched else sweep)
+
+
+# ---------------------------------------------------------------------------
+# TuckerPlan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TuckerPlan:
+    """A frozen, executable solver schedule for one (shape, dtype, config).
+
+    ``schedule`` lists every mode solve in execution order with the solver
+    the selector (or explicit methods) chose and the modeled FLOPs / peak
+    working-set bytes of that step.  ``execute`` runs the whole sweep as one
+    cached jitted program; ``execute_batch`` vmaps it over a leading axis.
+    """
+    shape: tuple[int, ...]
+    dtype: str
+    config: TuckerConfig
+    schedule: tuple[ModeStep, ...]
+    select_seconds: float = 0.0     # one-time planning cost (selector calls)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def methods(self) -> tuple[str, ...]:
+        """Resolved solver per mode (first visit order, sorted by mode)."""
+        first: dict[int, str] = {}
+        for s in self.schedule:
+            first.setdefault(s.mode, s.method)
+        return tuple(first[m] for m in sorted(first))
+
+    @property
+    def total_flops(self) -> float:
+        return sum(s.flops for s in self.schedule)
+
+    @property
+    def peak_bytes(self) -> int:
+        return max(s.peak_bytes for s in self.schedule)
+
+    def _cache_key(self, batched: bool) -> tuple:
+        return (self.shape, self.dtype,
+                tuple((s.mode, s.method, s.r_n) for s in self.schedule),
+                self.config.variant, self.config.impl, self.config.als_iters,
+                self.config.compute_dtype, batched)
+
+    def _sweep(self, batched: bool) -> Callable:
+        key = self._cache_key(batched)
+        fn = _SWEEP_CACHE.get(key)
+        if fn is None:
+            fn = _SWEEP_CACHE[key] = _make_sweep(self, batched)
+            CACHE_STATS["builds"] += 1
+        else:
+            CACHE_STATS["hits"] += 1
+        return fn
+
+    # -- execution -----------------------------------------------------------
+    def execute(self, x: jax.Array) -> SthosvdResult:
+        """Run the frozen schedule on ``x`` as one compiled program."""
+        x = jnp.asarray(x)
+        if tuple(x.shape) != self.shape:
+            raise ValueError(f"plan is for shape {self.shape}, got {x.shape}")
+        if str(x.dtype) != self.dtype:
+            raise ValueError(f"plan is for dtype {self.dtype}, got {x.dtype}")
+        core, factors = self._sweep(batched=False)(x)
+        return SthosvdResult(
+            tucker=TuckerTensor(core=core, factors=list(factors)),
+            trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0)
+                   for s in self.schedule],
+            select_overhead_s=0.0)
+
+    def execute_batch(self, xs: jax.Array) -> list[SthosvdResult]:
+        """Decompose a fleet of same-shaped tensors (leading batch axis) with
+        one vmapped program; returns one result per batch element."""
+        xs = jnp.asarray(xs)
+        if tuple(xs.shape[1:]) != self.shape:
+            raise ValueError(
+                f"plan is for batches of shape {self.shape}, got {xs.shape}")
+        if str(xs.dtype) != self.dtype:
+            raise ValueError(f"plan is for dtype {self.dtype}, got {xs.dtype}")
+        cores, factors = self._sweep(batched=True)(xs)
+        out = []
+        for b in range(xs.shape[0]):
+            out.append(SthosvdResult(
+                tucker=TuckerTensor(core=cores[b],
+                                    factors=[u[b] for u in factors]),
+                trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0)
+                       for s in self.schedule],
+                select_overhead_s=0.0))
+        return out
+
+    __call__ = execute
+
+    # -- persistence (mirrors Selector.save) ---------------------------------
+    def to_dict(self) -> dict:
+        return {"version": PLAN_FORMAT_VERSION, "shape": list(self.shape),
+                "dtype": self.dtype, "config": self.config.to_dict(),
+                "schedule": [s.to_dict() for s in self.schedule],
+                "select_seconds": self.select_seconds}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuckerPlan":
+        if d.get("version", 1) > PLAN_FORMAT_VERSION:
+            raise ValueError(f"plan format {d['version']} newer than supported "
+                             f"{PLAN_FORMAT_VERSION}")
+        return cls(shape=tuple(d["shape"]), dtype=d["dtype"],
+                   config=TuckerConfig.from_dict(d["config"]),
+                   schedule=tuple(ModeStep.from_dict(s) for s in d["schedule"]),
+                   select_seconds=d.get("select_seconds", 0.0))
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuckerPlan":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str | Path) -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path: str | Path) -> "TuckerPlan":
+        return cls.from_json(Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# plan / decompose
+# ---------------------------------------------------------------------------
+
+def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
+         selector: Callable[..., str] | None = None) -> TuckerPlan:
+    """Resolve ``config`` against a concrete (shape, dtype) → ``TuckerPlan``.
+
+    All selector/cost-model queries happen here, against the statically known
+    per-mode problem sizes; ``TuckerPlan.execute`` never selects again.
+    """
+    shape = tuple(int(s) for s in shape)
+    dtype = jnp.dtype(dtype)
+    compute_dtype = jnp.dtype(config.compute_dtype) if config.compute_dtype \
+        else dtype
+    timed = None
+    if config.methods == "auto":
+        if selector is None:
+            from .selector import default_selector
+            selector = default_selector()
+        selector = timed = TimedSelector(selector)
+    schedule = resolve_schedule(
+        shape, config.ranks, variant=config.variant, methods=config.methods,
+        mode_order=config.mode_order, selector=selector,
+        als_iters=config.als_iters, hooi_iters=config.hooi_iters,
+        itemsize=compute_dtype.itemsize)
+    return TuckerPlan(shape=shape, dtype=str(dtype), config=config,
+                      schedule=schedule,
+                      select_seconds=timed.seconds if timed else 0.0)
+
+
+def decompose(x: jax.Array, config: TuckerConfig, *,
+              selector: Callable[..., str] | None = None) -> SthosvdResult:
+    """One-shot convenience: ``plan(x.shape, x.dtype, config).execute(x)``.
+    The compiled sweep is still cached process-wide, so repeated calls on
+    same-shaped inputs only pay the (cheap) schedule resolution."""
+    x = jnp.asarray(x)
+    return plan(x.shape, x.dtype, config, selector=selector).execute(x)

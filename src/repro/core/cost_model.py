@@ -44,6 +44,15 @@ def als_flops(i_n: int, r_n: int, j_n: int,
     return per_iter * num_iters + 2.0 * j_n * r_n * r_n + f_qr(i_n, r_n)
 
 
+def svd_flops(i_n: int, r_n: int, j_n: int) -> float:
+    """Thin SVD of the I_n×J_n unfolding (Golub–Van Loan R-SVD count,
+    2mn² + 11n³ with n = min dim) plus the Σ·Vᵀ core update.  Only used for
+    schedule cost annotations — the paper's Alg. 1 baseline is never the
+    predicted-best solver."""
+    m, n = max(i_n, j_n), min(i_n, j_n)
+    return 2.0 * m * n * n + 11.0 * n ** 3 + float(r_n) * j_n
+
+
 def predicted_best(i_n: int, r_n: int, j_n: int,
                    num_iters: int = DEFAULT_ALS_ITERS) -> str:
     """Analytic solver choice: smaller modeled FLOP count wins."""

@@ -1,0 +1,303 @@
+"""Static solver schedules for the plan/execute Tucker front door.
+
+The paper's flexible algorithms pick a solver per mode at runtime; here the
+same selection happens ONCE, ahead of time, against the (statically known)
+shapes each mode solve will see.  The result is a tuple of :class:`ModeStep`
+records — mode, solver, the (I_n, R_n, J_n) triple the selector saw, plus
+modeled FLOPs (cost_model Eq. 4/5) and peak working-set bytes — which is
+
+  * the single dispatch point for all three variants (st-HOSVD shrinks the
+    tensor between steps, t-HOSVD solves every mode on the original tensor,
+    HOOI refines from an st-HOSVD init), replacing the per-variant copies of
+    the selector/dispatch logic, and
+  * fully static, so an entire sweep can be compiled as ONE jitted program
+    and vmapped over a batch axis (see :mod:`repro.core.api`).
+
+``run_schedule`` is the eager per-step runner used by the legacy entry
+points (per-mode wall-clock in the trace); the ``sweep_*`` builders express
+the same schedules as pure functions for whole-program jit.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+
+from . import tensor_ops as T
+from .cost_model import als_flops, eig_flops, svd_flops
+from .solvers import ALS, DEFAULT_ALS_ITERS, SOLVERS
+
+VARIANTS = ("sthosvd", "thosvd", "hooi")
+
+
+@dataclass(frozen=True)
+class ModeStep:
+    """One frozen mode solve: which solver runs on which (sub)problem."""
+    mode: int
+    method: str          # "eig" | "als" | "svd"
+    i_n: int             # mode dimension at solve time
+    r_n: int             # truncation rank
+    j_n: int             # product of the remaining dims at solve time
+    flops: float         # modeled solver cost (cost_model Eq. 4/5)
+    peak_bytes: int      # modeled peak working set of this step
+
+    def to_dict(self) -> dict:
+        return {"mode": self.mode, "method": self.method, "i_n": self.i_n,
+                "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
+                "peak_bytes": self.peak_bytes}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModeStep":
+        return cls(mode=int(d["mode"]), method=str(d["method"]),
+                   i_n=int(d["i_n"]), r_n=int(d["r_n"]), j_n=int(d["j_n"]),
+                   flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]))
+
+
+class TimedSelector:
+    """Wraps a selector callable, accumulating wall-clock spent selecting."""
+
+    def __init__(self, selector: Callable[..., str]):
+        self._selector = selector
+        self.seconds = 0.0
+        self.calls = 0
+
+    def __call__(self, *, i_n: int, r_n: int, j_n: int) -> str:
+        t0 = time.perf_counter()
+        method = self._selector(i_n=i_n, r_n=r_n, j_n=j_n)
+        self.seconds += time.perf_counter() - t0
+        self.calls += 1
+        return method
+
+
+# ---------------------------------------------------------------------------
+# Schedule resolution (selection moved out of the hot loop)
+# ---------------------------------------------------------------------------
+
+def resolve_mode_order(shape: Sequence[int], ranks: Sequence[int],
+                       mode_order) -> list[int]:
+    n = len(shape)
+    if mode_order is None:
+        return list(range(n))
+    if mode_order == "shrink":
+        return sorted(range(n), key=lambda m: ranks[m] / shape[m])
+    order = [int(m) for m in mode_order]
+    if sorted(order) != list(range(n)):
+        raise ValueError(f"mode_order {order} must be a permutation of 0..{n - 1}")
+    return order
+
+
+def validate_ranks(shape: Sequence[int], ranks: Sequence[int]) -> tuple[int, ...]:
+    ranks = tuple(int(r) for r in ranks)
+    if len(ranks) != len(shape):
+        raise ValueError(f"ranks {ranks} do not match tensor order {len(shape)}")
+    for m, (i, r) in enumerate(zip(shape, ranks)):
+        if not (1 <= r <= i):
+            raise ValueError(f"rank {r} invalid for mode {m} (dim {i})")
+    return ranks
+
+
+def _resolve_methods(methods, n_modes: int):
+    """Normalize ``methods`` to either None (= use selector) or a per-mode list."""
+    if methods == "auto":
+        return None
+    if isinstance(methods, str):
+        methods = [methods] * n_modes
+    else:
+        methods = list(methods)
+        if len(methods) != n_modes:
+            raise ValueError(f"need {n_modes} per-mode methods, got {len(methods)}")
+    for m in methods:
+        if m not in SOLVERS:
+            raise ValueError(f"unknown solver {m!r}")
+    return methods
+
+
+def _step_cost(method: str, i_n: int, r_n: int, j_n: int,
+               als_iters: int) -> float:
+    if method == "eig":
+        return eig_flops(i_n, r_n, j_n)
+    if method == "als":
+        return als_flops(i_n, r_n, j_n, als_iters)
+    return svd_flops(i_n, r_n, j_n)
+
+
+def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
+                     itemsize: int) -> int:
+    """Modeled peak working set: input + output tensors plus solver scratch
+    (EIG: the I_n×I_n Gram; ALS: L/R iterates; SVD: the explicit unfolding
+    plus its left singular block)."""
+    io = i_n * j_n + r_n * j_n
+    if method == "eig":
+        scratch = i_n * i_n
+    elif method == "als":
+        scratch = 2 * (i_n * r_n + r_n * j_n) + 2 * r_n * r_n
+    else:  # svd materializes the unfolding and U
+        scratch = i_n * j_n + i_n * min(i_n, j_n)
+    return int((io + scratch) * itemsize)
+
+
+def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
+               als_iters: int, itemsize: int) -> ModeStep:
+    m = selector(i_n=i_n, r_n=r_n, j_n=j_n) if method is None else method
+    if m not in SOLVERS:
+        raise ValueError(f"unknown solver {m!r}")
+    return ModeStep(mode=mode, method=m, i_n=i_n, r_n=r_n, j_n=j_n,
+                    flops=_step_cost(m, i_n, r_n, j_n, als_iters),
+                    peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize))
+
+
+def resolve_schedule(
+    shape: Sequence[int],
+    ranks: Sequence[int],
+    *,
+    variant: str = "sthosvd",
+    methods="auto",
+    mode_order=None,
+    selector: Callable[..., str] | None = None,
+    als_iters: int = DEFAULT_ALS_ITERS,
+    hooi_iters: int = 3,
+    include_init: bool = True,
+    itemsize: int = 4,
+) -> tuple[ModeStep, ...]:
+    """Resolve the full per-mode solver schedule ahead of execution.
+
+    Every (I_n, R_n, J_n) triple a runtime selector would have seen is
+    derived from ``shape``/``ranks`` alone, so selection runs zero times at
+    execute time.  For HOOI, ``include_init=False`` drops the st-HOSVD init
+    sweep (caller supplies its own initial factors).
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+    shape = tuple(int(s) for s in shape)
+    ranks = validate_ranks(shape, ranks)
+    n = len(shape)
+    fixed = _resolve_methods(methods, n)
+    if fixed is None and selector is None:
+        from .selector import default_selector
+        selector = default_selector()
+
+    def method_for(mode):
+        return None if fixed is None else fixed[mode]
+
+    steps: list[ModeStep] = []
+    if variant == "thosvd":
+        if mode_order is not None:
+            raise ValueError("mode_order is meaningless for thosvd (factors "
+                             "are computed independently from the original "
+                             "tensor); leave it None")
+        size = math.prod(shape)
+        for mode in range(n):
+            i_n, r_n = shape[mode], ranks[mode]
+            steps.append(_make_step(mode, method_for(mode), selector,
+                                    i_n, r_n, size // i_n, als_iters, itemsize))
+        return tuple(steps)
+
+    # st-HOSVD sweep (also HOOI's init): the tensor shrinks between steps
+    if variant == "sthosvd" or include_init:
+        cur = list(shape)
+        for mode in resolve_mode_order(shape, ranks, mode_order):
+            i_n, r_n = cur[mode], ranks[mode]
+            j_n = math.prod(cur) // i_n
+            steps.append(_make_step(mode, method_for(mode), selector,
+                                    i_n, r_n, j_n, als_iters, itemsize))
+            cur[mode] = r_n
+    if variant == "sthosvd":
+        return tuple(steps)
+
+    # HOOI refinement sweeps: mode n sees x projected on all OTHER factors,
+    # i.e. shape (R_0 .. I_n .. R_{N-1}) — static, so resolvable up front.
+    rank_prod = math.prod(ranks)
+    for _ in range(hooi_iters):
+        for mode in range(n):
+            i_n, r_n = shape[mode], ranks[mode]
+            j_n = rank_prod // r_n
+            steps.append(_make_step(mode, method_for(mode), selector,
+                                    i_n, r_n, j_n, als_iters, itemsize))
+    return tuple(steps)
+
+
+# ---------------------------------------------------------------------------
+# Single solver dispatch + runners
+# ---------------------------------------------------------------------------
+
+def solve_step(y: jax.Array, step: ModeStep, *, als_iters: int = DEFAULT_ALS_ITERS,
+               impl: str = "matfree"):
+    """THE solver dispatch point: every variant's mode solve funnels here."""
+    if step.method == ALS:
+        return SOLVERS[ALS](y, step.mode, step.r_n, num_iters=als_iters, impl=impl)
+    return SOLVERS[step.method](y, step.mode, step.r_n, impl=impl)
+
+
+def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
+                 sequential: bool, als_iters: int = DEFAULT_ALS_ITERS,
+                 impl: str = "matfree", block_until_ready: bool = False):
+    """Eager runner: per-mode jitted solves with wall-clock per step.
+
+    ``sequential=True`` threads the shrinking tensor through the steps
+    (st-HOSVD); ``sequential=False`` solves every step against ``x`` itself
+    (t-HOSVD factors, HOOI inner solves on pre-projected tensors).
+
+    Returns ``(y_or_none, factors, seconds)`` where ``factors[mode]`` is the
+    LAST factor computed for that mode and ``seconds[k]`` is step k's wall
+    time.
+    """
+    y = x
+    factors: dict[int, jax.Array] = {}
+    seconds: list[float] = []
+    for step in steps:
+        t0 = time.perf_counter()
+        res = solve_step(y if sequential else x, step,
+                         als_iters=als_iters, impl=impl)
+        if block_until_ready:
+            jax.block_until_ready(res.y_new)
+        seconds.append(time.perf_counter() - t0)
+        factors[step.mode] = res.u
+        if sequential:
+            y = res.y_new
+    return (y if sequential else None), factors, seconds
+
+
+# ---------------------------------------------------------------------------
+# Whole-sweep pure functions (compiled as ONE program by api.TuckerPlan)
+# ---------------------------------------------------------------------------
+
+def sweep_sthosvd(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str):
+    y = x
+    factors: dict[int, jax.Array] = {}
+    for step in steps:
+        res = solve_step(y, step, als_iters=als_iters, impl=impl)
+        factors[step.mode] = res.u
+        y = res.y_new
+    return y, [factors[m] for m in range(x.ndim)]
+
+
+def sweep_thosvd(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str):
+    factors = [solve_step(x, step, als_iters=als_iters, impl=impl).u
+               for step in steps]
+    core = x
+    for mode, u in enumerate(factors):
+        core = T.ttm(core, u.T, mode)
+    return core, factors
+
+
+def sweep_hooi(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str,
+               n_init: int):
+    """HOOI with its st-HOSVD init inlined: ``steps[:n_init]`` is the init
+    sweep (sequential shrink), the rest are refinement solves on x projected
+    over every factor but the step's mode."""
+    _, factors = sweep_sthosvd(x, steps[:n_init], als_iters=als_iters, impl=impl)
+    for step in steps[n_init:]:
+        y = x
+        for m, u in enumerate(factors):
+            if m != step.mode:
+                y = T.ttm(y, u.T, m)
+        factors[step.mode] = solve_step(y, step, als_iters=als_iters,
+                                        impl=impl).u
+    core = x
+    for mode, u in enumerate(factors):
+        core = T.ttm(core, u.T, mode)
+    return core, factors

@@ -100,16 +100,21 @@ def model_path(platform: str | None = None) -> Path:
     return _DEFAULT_MODEL_DIR / f"selector_{platform}.json"
 
 
-_DEFAULT: Selector | None = None
+_DEFAULT_BY_PLATFORM: dict[str, Selector] = {}
 
 
-def default_selector() -> Selector:
-    """Trained tree for this platform if present, else cost-model fallback."""
-    global _DEFAULT
-    if _DEFAULT is None:
-        p = model_path()
-        _DEFAULT = Selector.load(p) if p.exists() else Selector()
-    return _DEFAULT
+def default_selector(platform: str | None = None) -> Selector:
+    """Trained tree for ``platform`` (default: current JAX backend) if present,
+    else cost-model fallback.  Cached per platform, so CPU and GPU model files
+    resolve correctly side by side in one process."""
+    import jax
+    platform = platform or jax.default_backend()
+    sel = _DEFAULT_BY_PLATFORM.get(platform)
+    if sel is None:
+        p = model_path(platform)
+        sel = Selector.load(p) if p.exists() else Selector(platform=platform)
+        _DEFAULT_BY_PLATFORM[platform] = sel
+    return sel
 
 
 # ---------------------------------------------------------------------------
@@ -196,11 +201,11 @@ def train_selector(
 
 
 def train_and_save(platform: str | None = None, **collect_kw) -> dict:
+    import jax
     feats, labels, _ = collect_samples(**collect_kw)
     sel, info = train_selector(feats, labels)
     sel.save(model_path(platform))
-    global _DEFAULT
-    _DEFAULT = sel
+    _DEFAULT_BY_PLATFORM[platform or jax.default_backend()] = sel
     return info
 
 

@@ -1,8 +1,10 @@
 """Mode-wise flexible st-HOSVD (a-Tucker Alg. 2) and coarse-grained variants.
 
-The mode loop runs at trace/Python level (every mode has different shapes →
-separate XLA programs anyway, exactly like the per-mode kernel launches in
-the paper); each per-mode solve is a jitted, matricization-free program.
+These are the legacy per-call entry points, kept as thin wrappers over the
+plan/execute machinery (:mod:`repro.core.plan`): the per-mode solver schedule
+is resolved up front (selector time is reported as ``select_overhead_s``) and
+then run eagerly — per-mode jitted solves with real wall-clock in the trace.
+For amortized/batched execution use :mod:`repro.core.api` instead.
 
 ``methods`` accepts:
   - "auto"              → adaptive selector (decision tree, cost-model fallback)
@@ -13,15 +15,13 @@ the paper); each per-mode solve is a jitted, matricization-free program.
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Callable, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from . import tensor_ops as T
-from .solvers import ALS, DEFAULT_ALS_ITERS, EIG, SOLVERS, SVD
+from .solvers import ALS, DEFAULT_ALS_ITERS, EIG, SVD
 
 
 @dataclass
@@ -74,15 +74,6 @@ class SthosvdResult:
         return tuple(t.method for t in sorted(self.trace, key=lambda t: t.mode))
 
 
-def _resolve_methods(methods, n_modes: int) -> list[str]:
-    if isinstance(methods, str):
-        return [methods] * n_modes
-    methods = list(methods)
-    if len(methods) != n_modes:
-        raise ValueError(f"need {n_modes} per-mode methods, got {len(methods)}")
-    return methods
-
-
 def sthosvd(
     x: jax.Array,
     ranks: Sequence[int],
@@ -100,61 +91,27 @@ def sthosvd(
     ordering (beyond-paper, DESIGN.md §9.3) is available via
     ``mode_order="shrink"``.
     """
-    n = x.ndim
-    ranks = tuple(int(r) for r in ranks)
-    if len(ranks) != n:
-        raise ValueError(f"ranks {ranks} do not match tensor order {n}")
-    for m, (i, r) in enumerate(zip(x.shape, ranks)):
-        if not (1 <= r <= i):
-            raise ValueError(f"rank {r} invalid for mode {m} (dim {i})")
+    from .plan import TimedSelector, resolve_schedule, run_schedule
 
-    if mode_order is None:
-        order = list(range(n))
-    elif mode_order == "shrink":
-        order = sorted(range(n), key=lambda m: ranks[m] / x.shape[m])
-    else:
-        order = list(mode_order)
-        if sorted(order) != list(range(n)):
-            raise ValueError(f"mode_order {order} must be a permutation of 0..{n-1}")
+    timed = None
+    if methods == "auto":
+        if selector is None:
+            from .selector import default_selector
+            selector = default_selector()
+        selector = timed = TimedSelector(selector)
+    schedule = resolve_schedule(
+        x.shape, ranks, variant="sthosvd", methods=methods,
+        mode_order=mode_order, selector=selector, als_iters=als_iters,
+        itemsize=x.dtype.itemsize)
 
-    fixed = None if methods == "auto" else _resolve_methods(methods, n)
-    if methods == "auto" and selector is None:
-        from .selector import default_selector
-        selector = default_selector()
-
-    y = x
-    factors: list[jax.Array | None] = [None] * n
-    trace: list[ModeTrace] = []
-    select_overhead = 0.0
-
-    for mode in order:
-        i_n = y.shape[mode]
-        r_n = ranks[mode]
-        j_n = y.size // i_n
-        if fixed is not None:
-            method = fixed[mode]
-        else:
-            t0 = time.perf_counter()
-            method = selector(i_n=i_n, r_n=r_n, j_n=j_n)
-            select_overhead += time.perf_counter() - t0
-        if method not in SOLVERS:
-            raise ValueError(f"unknown solver {method!r}")
-
-        t0 = time.perf_counter()
-        if method == ALS:
-            res = SOLVERS[ALS](y, mode, r_n, num_iters=als_iters, impl=impl)
-        else:
-            res = SOLVERS[method](y, mode, r_n, impl=impl)
-        if block_until_ready:
-            jax.block_until_ready(res.y_new)
-        dt = time.perf_counter() - t0
-
-        factors[mode] = res.u
-        y = res.y_new
-        trace.append(ModeTrace(mode, method, i_n, r_n, j_n, dt))
-
-    tucker = TuckerTensor(core=y, factors=factors)  # type: ignore[arg-type]
-    return SthosvdResult(tucker=tucker, trace=trace, select_overhead_s=select_overhead)
+    core, factors, seconds = run_schedule(
+        x, schedule, sequential=True, als_iters=als_iters, impl=impl,
+        block_until_ready=block_until_ready)
+    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt)
+             for s, dt in zip(schedule, seconds)]
+    tucker = TuckerTensor(core=core, factors=[factors[m] for m in range(x.ndim)])
+    return SthosvdResult(tucker=tucker, trace=trace,
+                         select_overhead_s=timed.seconds if timed else 0.0)
 
 
 # Coarse-grained baselines (paper Sec. VI) -----------------------------------

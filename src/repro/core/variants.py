@@ -12,46 +12,57 @@ matricization-free solvers and the same adaptive selector:
     factors, initialized from st-HOSVD (the standard pairing).  Each inner
     subproblem is a mode solve of the partially-projected tensor, so the
     EIG/ALS switch and the selector apply verbatim.
+
+Both route through :mod:`repro.core.plan`'s schedule resolution and solver
+dispatch — the per-variant copies of the selector logic are gone, and
+``impl=``/``block_until_ready=`` behave exactly as in :func:`sthosvd`.
 """
 
 from __future__ import annotations
 
+import time
+
 import jax
-import jax.numpy as jnp
 
 from . import tensor_ops as T
-from .solvers import DEFAULT_ALS_ITERS, SOLVERS
-from .sthosvd import SthosvdResult, ModeTrace, TuckerTensor, sthosvd
+from .plan import TimedSelector, resolve_schedule, run_schedule, solve_step
+from .solvers import DEFAULT_ALS_ITERS
+from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor, sthosvd
 
 
-def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
-           selector=None, als_iters: int = DEFAULT_ALS_ITERS) -> SthosvdResult:
-    """Truncated HOSVD: factors from the original tensor, one projection."""
-    n = x.ndim
-    ranks = tuple(int(r) for r in ranks)
+def _auto_selector(methods, selector):
     if methods == "auto" and selector is None:
         from .selector import default_selector
         selector = default_selector()
+    return TimedSelector(selector) if methods == "auto" else None
 
-    factors = []
-    trace = []
-    for mode in range(n):
-        i_n, r_n = x.shape[mode], ranks[mode]
-        j_n = x.size // i_n
-        method = (selector(i_n=i_n, r_n=r_n, j_n=j_n) if methods == "auto"
-                  else (methods if isinstance(methods, str) else methods[mode]))
-        kw = {"num_iters": als_iters} if method == "als" else {}
-        res = SOLVERS[method](x, mode, r_n, **kw)
-        factors.append(res.u)
-        trace.append(ModeTrace(mode, method, i_n, r_n, j_n, 0.0))
+
+def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
+           selector=None, als_iters: int = DEFAULT_ALS_ITERS,
+           impl: str = "matfree",
+           block_until_ready: bool = False) -> SthosvdResult:
+    """Truncated HOSVD: factors from the original tensor, one projection."""
+    timed = _auto_selector(methods, selector)
+    schedule = resolve_schedule(
+        x.shape, ranks, variant="thosvd", methods=methods,
+        selector=timed or selector, als_iters=als_iters,
+        itemsize=x.dtype.itemsize)
+    _, factors, seconds = run_schedule(
+        x, schedule, sequential=False, als_iters=als_iters, impl=impl,
+        block_until_ready=block_until_ready)
+    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt)
+             for s, dt in zip(schedule, seconds)]
     core = x
-    for mode, u in enumerate(factors):
-        core = T.ttm(core, u.T, mode)
-    return SthosvdResult(TuckerTensor(core=core, factors=factors), trace=trace)
+    for mode in range(x.ndim):
+        core = T.ttm(core, factors[mode].T, mode)
+    return SthosvdResult(
+        TuckerTensor(core=core, factors=[factors[m] for m in range(x.ndim)]),
+        trace=trace, select_overhead_s=timed.seconds if timed else 0.0)
 
 
 def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
          selector=None, als_iters: int = DEFAULT_ALS_ITERS,
+         impl: str = "matfree", block_until_ready: bool = False,
          init: SthosvdResult | None = None) -> SthosvdResult:
     """Higher-order orthogonal iteration, st-HOSVD-initialized.
 
@@ -59,34 +70,33 @@ def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
     with the flexible (selector-driven) solver.  Error is non-increasing in
     exact arithmetic; typically converges in 2–5 sweeps.
     """
-    n = x.ndim
-    ranks = tuple(int(r) for r in ranks)
-    if methods == "auto" and selector is None:
-        from .selector import default_selector
-        selector = default_selector()
-
-    base = init or sthosvd(x, ranks, methods=methods, selector=selector,
-                           als_iters=als_iters)
+    timed = _auto_selector(methods, selector)
+    base = init or sthosvd(x, ranks, methods=methods,
+                           selector=timed or selector, als_iters=als_iters,
+                           impl=impl, block_until_ready=block_until_ready)
     factors = list(base.tucker.factors)
     trace = list(base.trace)
 
-    for _ in range(n_iters):
-        for mode in range(n):
-            # project on every factor except `mode`
-            y = x
-            for m, u in enumerate(factors):
-                if m != mode:
-                    y = T.ttm(y, u.T, m)
-            i_n, r_n = y.shape[mode], ranks[mode]
-            j_n = y.size // i_n
-            method = (selector(i_n=i_n, r_n=r_n, j_n=j_n) if methods == "auto"
-                      else (methods if isinstance(methods, str) else methods[mode]))
-            kw = {"num_iters": als_iters} if method == "als" else {}
-            res = SOLVERS[method](y, mode, r_n, **kw)
-            factors[mode] = res.u
-            trace.append(ModeTrace(mode, method, i_n, r_n, j_n, 0.0))
+    schedule = resolve_schedule(
+        x.shape, ranks, variant="hooi", methods=methods,
+        selector=timed or selector, als_iters=als_iters, hooi_iters=n_iters,
+        include_init=False, itemsize=x.dtype.itemsize)
+    for step in schedule:
+        y = x
+        for m, u in enumerate(factors):
+            if m != step.mode:
+                y = T.ttm(y, u.T, m)
+        t0 = time.perf_counter()
+        res = solve_step(y, step, als_iters=als_iters, impl=impl)
+        if block_until_ready:
+            jax.block_until_ready(res.u)
+        factors[step.mode] = res.u
+        trace.append(ModeTrace(step.mode, step.method, step.i_n, step.r_n,
+                               step.j_n, time.perf_counter() - t0))
 
     core = x
     for mode, u in enumerate(factors):
         core = T.ttm(core, u.T, mode)
-    return SthosvdResult(TuckerTensor(core=core, factors=factors), trace=trace)
+    return SthosvdResult(TuckerTensor(core=core, factors=factors),
+                         trace=trace,
+                         select_overhead_s=timed.seconds if timed else 0.0)

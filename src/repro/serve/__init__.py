@@ -1,1 +1,5 @@
-"""serve substrate."""
+"""serve substrate: LM continuous batching + Tucker decomposition serving."""
+
+from .engine import Request, ServeEngine, TuckerBatchEngine, TuckerRequest
+
+__all__ = ["Request", "ServeEngine", "TuckerBatchEngine", "TuckerRequest"]

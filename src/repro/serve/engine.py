@@ -1,25 +1,31 @@
-"""Batched serving engine: slot-based continuous batching over the decode
-step.
+"""Batched serving engines.
 
+``ServeEngine`` — slot-based continuous batching over the LM decode step.
 Requests are admitted into fixed batch slots; each slot tracks its own
 position; finished slots (EOS or max_len) are refilled from the queue
 without stopping the batch — the decode step is one compiled program
 regardless of slot occupancy (inactive slots decode garbage that is masked
-out, the standard static-shape trick).
+out, the standard static-shape trick).  Prefill runs per-request
+(right-padded to the slot's prompt bucket) and writes the slot's stripe of
+the batched KV cache.
 
-Prefill runs per-request (right-padded to the slot's prompt bucket) and
-writes the slot's stripe of the batched KV cache.
+``TuckerBatchEngine`` — the decomposition-serving counterpart, built on the
+plan/execute front door (:mod:`repro.core.api`): requests carrying small
+dense tensors are grouped by (shape, dtype, config), each group reuses one
+cached ``TuckerPlan`` (selector + compilation amortized across the fleet),
+and same-shaped groups execute as a single vmapped program.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.api import TuckerConfig, TuckerPlan, plan as make_plan
+from ..core.sthosvd import SthosvdResult
 from ..models.registry import ModelBundle
 
 
@@ -101,4 +107,60 @@ class ServeEngine:
                         self.pos[s] >= self.max_len - 1:
                     r.done = True
                     self.slot_req[s] = None
+        return requests
+
+
+# ---------------------------------------------------------------------------
+# Tucker decomposition serving (plan/execute front door)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TuckerRequest:
+    """One decomposition job: a small dense tensor plus its TuckerConfig."""
+    x: jax.Array
+    config: TuckerConfig
+    rid: int = 0
+    result: SthosvdResult | None = None
+
+
+class TuckerBatchEngine:
+    """Serves fleets of small Tucker decompositions with amortized planning.
+
+    Per (shape, dtype, config) group the engine plans ONCE — the adaptive
+    selector and XLA compilation run on the first request only — and then
+    executes each wave of same-shaped requests as one vmapped program via
+    ``TuckerPlan.execute_batch`` (singleton groups fall back to ``execute``
+    so they share the unbatched compiled sweep).
+    """
+
+    def __init__(self, selector=None):
+        self._selector = selector
+        self._plans: dict[tuple, TuckerPlan] = {}
+        self.stats = {"plans_built": 0, "requests": 0, "batches": 0}
+
+    def plan_for(self, shape, dtype, config: TuckerConfig) -> TuckerPlan:
+        key = (tuple(shape), str(jnp.dtype(dtype)), config)
+        p = self._plans.get(key)
+        if p is None:
+            p = make_plan(shape, dtype, config, selector=self._selector)
+            self._plans[key] = p
+            self.stats["plans_built"] += 1
+        return p
+
+    def run(self, requests: list[TuckerRequest]) -> list[TuckerRequest]:
+        groups: dict[tuple, list[TuckerRequest]] = {}
+        for r in requests:
+            x = jnp.asarray(r.x)
+            key = (tuple(x.shape), str(x.dtype), r.config)
+            groups.setdefault(key, []).append(r)
+        for (shape, dtype, config), grp in groups.items():
+            p = self.plan_for(shape, dtype, config)
+            if len(grp) == 1:
+                grp[0].result = p.execute(jnp.asarray(grp[0].x))
+            else:
+                xs = jnp.stack([jnp.asarray(r.x) for r in grp])
+                for r, res in zip(grp, p.execute_batch(xs)):
+                    r.result = res
+            self.stats["requests"] += len(grp)
+            self.stats["batches"] += 1
         return requests

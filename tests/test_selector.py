@@ -90,6 +90,26 @@ class TestSelector:
         assert sel(i_n=400, r_n=10, j_n=50) == "als"
         assert sel(i_n=10, r_n=4, j_n=50) == "eig"
 
+    def test_default_selector_platform_keyed(self, tmp_path, monkeypatch):
+        """CPU and GPU model files resolve independently in one process."""
+        from repro.core import selector as sel_mod
+        monkeypatch.setattr(sel_mod, "_DEFAULT_MODEL_DIR", tmp_path)
+        monkeypatch.setattr(sel_mod, "_DEFAULT_BY_PLATFORM", {})
+        rng = np.random.default_rng(2)
+        feats = np.stack([extract_features(i, r, j) for i, r, j in
+                          rng.integers(2, 500, (100, 3))])
+        trained, _ = train_selector(feats, (feats[:, 0] > 100).astype(int))
+        trained.save(tmp_path / "selector_gpu.json")
+
+        gpu = sel_mod.default_selector("gpu")
+        cpu = sel_mod.default_selector("cpu")     # no file → cost-model fallback
+        assert gpu.tree is not None
+        assert cpu.tree is None
+        # cached per platform, not one global
+        assert sel_mod.default_selector("gpu") is gpu
+        assert sel_mod.default_selector("cpu") is cpu
+        assert gpu is not cpu
+
     def test_save_load(self, tmp_path):
         rng = np.random.default_rng(1)
         feats = np.stack([extract_features(i, r, j) for i, r, j in

@@ -58,3 +58,33 @@ class TestHOOI:
         res = hooi(x, (2, 3, 2), n_iters=1, methods="auto")
         assert float(res.tucker.rel_error(x)) < 0.12
         assert len(res.trace) == 3 + 3     # init sweep + 1 HOOI sweep
+
+
+class TestImplAndTrace:
+    """impl= must reach the solvers, and traces must carry real wall-clock."""
+
+    @pytest.mark.parametrize("fn,kw", [
+        (thosvd, {}),
+        (hooi, {"n_iters": 1}),
+    ])
+    def test_explicit_impl_parity(self, fn, kw):
+        x = lowrank((9, 10, 8), (3, 3, 3), noise=0.02)
+        a = fn(x, (3, 3, 3), methods="eig", impl="matfree", **kw)
+        b = fn(x, (3, 3, 3), methods="eig", impl="explicit", **kw)
+        np.testing.assert_allclose(float(a.tucker.rel_error(x)),
+                                   float(b.tucker.rel_error(x)), atol=1e-5)
+
+    @pytest.mark.parametrize("fn,kw", [
+        (thosvd, {}),
+        (hooi, {"n_iters": 1}),
+    ])
+    def test_trace_records_real_seconds(self, fn, kw):
+        x = lowrank((12, 10, 8), (3, 3, 2), noise=0.05)
+        res = fn(x, (3, 3, 2), methods="eig", block_until_ready=True, **kw)
+        assert all(t.seconds >= 0.0 for t in res.trace)
+        assert any(t.seconds > 0.0 for t in res.trace)
+
+    def test_impl_rejects_unknown(self):
+        x = lowrank((6, 6, 6), (2, 2, 2))
+        with pytest.raises(ValueError):
+            thosvd(x, (2, 2, 2), methods="eig", impl="bogus")
