@@ -1,0 +1,117 @@
+"""Backend-comparison micro-bench: TTM / Gram / TTT per ops backend.
+
+Times each registered backend on the three solver primitives plus one
+planned st-HOSVD sweep per backend, prints the usual ``name,us_per_call,
+derived`` CSV rows, and writes a ``BENCH_backend.json`` row file so the
+perf trajectory tracks kernel-level numbers across PRs.
+
+Off-TPU the ``pallas`` backend runs in interpret mode — numerically the
+same code path but orders of magnitude slower, so its wall times are only
+a correctness/regression signal there (``native=false`` in the JSON row).
+Shapes default small enough for interpret mode in CI; ``--full`` uses
+TPU-scale tiles.
+
+Usage:  python -m benchmarks.backend_bench [--full] [--out BENCH_backend.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TuckerConfig, get_backend, plan
+from repro.core.backend import backend_names
+
+from .common import emit, lowrank_tensor, time_call
+
+# small odd shapes exercise the pallas padding shims; full = tile-aligned
+CASES = {
+    False: [((33, 24, 17), 0, 8), ((12, 40, 20), 1, 6), ((13, 21, 48), 2, 5)],
+    True: [((512, 256, 128), 0, 32), ((128, 512, 256), 1, 32),
+           ((256, 128, 512), 2, 32)],
+}
+SWEEP = {False: ((24, 20, 16), (4, 4, 4)),
+         True: ((256, 128, 96), (16, 16, 16))}
+
+
+def bench_backends(full: bool = False, reps: int = 3) -> list[dict]:
+    native = jax.default_backend() == "tpu"
+    rows: list[dict] = []
+    rng = np.random.default_rng(0)
+
+    for shape, mode, r in CASES[full]:
+        x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((r, shape[mode])), jnp.float32)
+        y = jnp.asarray(rng.standard_normal(
+            shape[:mode] + (r,) + shape[mode + 1:]), jnp.float32)
+        ref_ttm = ref_gram = ref_ttt = None
+        for name in backend_names():
+            b = get_backend(name)
+            ttm, gram, ttt = b.ops()
+            for op, fn in (("ttm", lambda: ttm(x, u, mode)),
+                           ("gram", lambda: gram(x, mode)),
+                           ("ttt", lambda: ttt(x, y, mode))):
+                t = time_call(fn, reps=reps)
+                got = np.asarray(fn(), np.float32)
+                if name == "matfree":
+                    if op == "ttm":
+                        ref_ttm = got
+                    elif op == "gram":
+                        ref_gram = got
+                    else:
+                        ref_ttt = got
+                ref = {"ttm": ref_ttm, "gram": ref_gram, "ttt": ref_ttt}[op]
+                err = float(np.abs(got - ref).max())
+                tag = "x".join(map(str, shape))
+                emit(f"backend/{name}/{op}/{tag}_m{mode}", t,
+                     f"maxerr_vs_matfree={err:.2e}")
+                rows.append({"bench": "op", "backend": name, "op": op,
+                             "shape": list(shape), "mode": mode, "r": r,
+                             "us_per_call": t * 1e6,
+                             "maxerr_vs_matfree": err,
+                             "native": native or b.native_on(
+                                 jax.default_backend())})
+
+    dims, ranks = SWEEP[full]
+    x = lowrank_tensor(dims, ranks, noise=0.05)
+    for name in backend_names():
+        cfg = TuckerConfig(ranks=ranks, methods="eig", impl=name)
+        p = plan(x.shape, x.dtype, cfg)
+        t = time_call(lambda: jax.block_until_ready(p.execute(x).tucker.core),
+                      reps=reps)
+        err = float(p.execute(x).tucker.rel_error(x))
+        tag = "x".join(map(str, dims))
+        emit(f"backend/{name}/sweep/{tag}", t, f"rel_err={err:.4f}")
+        rows.append({"bench": "sweep", "backend": name, "shape": list(dims),
+                     "ranks": list(ranks), "us_per_call": t * 1e6,
+                     "rel_err": err,
+                     "native": get_backend(name).native_on(
+                         jax.default_backend())})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="TPU-scale, tile-aligned shapes")
+    ap.add_argument("--out", default="BENCH_backend.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = bench_backends(full=args.full)
+    if args.out:
+        doc = {"bench": "backend", "jax_backend": jax.default_backend(),
+               "host": _platform.machine(), "full": args.full, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -192,14 +192,21 @@ def fig8_matfree(full: bool = False, factor: float = 0.18):
     kernels (kernels/) realize the matricization-free structure directly."""
     import math
     from repro.core import tensor_ops as T
+    from .system_bench import _bench_backends
     out = {}
     for name, (dims, truncs) in list(REALWORLD.items()):
         d, r = (dims, truncs) if full else scaled(dims, truncs, factor)
         x = lowrank_tensor(d, r, noise=0.05)
-        tm = time_call(lambda: sthosvd(x, r, methods="eig", impl="matfree",
-                                       block_until_ready=True), reps=2)
-        te = time_call(lambda: sthosvd(x, r, methods="eig", impl="explicit",
-                                       block_until_ready=True), reps=2)
+        # the backend axis: one timed row per ops backend (pallas rows join
+        # on TPU / when forced — interpret mode isn't a perf signal)
+        t_backend = {
+            impl: time_call(lambda: sthosvd(x, r, methods="eig", impl=impl,
+                                            block_until_ready=True), reps=2)
+            for impl in _bench_backends()}
+        tm, te = t_backend["matfree"], t_backend["explicit"]
+        for impl, t in t_backend.items():
+            if impl not in ("matfree", "explicit"):
+                emit(f"fig8/{name}/{impl}", t, f"vs_matfree=x{tm / t:.2f}")
         # structural diff: transposes in the lowered mode-1 Gram
         hlo_m = jax.jit(lambda y: T.gram(y, 1)).lower(x).as_text()
         hlo_e = jax.jit(lambda y: T.gram_explicit(y, 1)).lower(x).as_text()

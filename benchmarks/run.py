@@ -13,10 +13,12 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-list of bench names")
     args = ap.parse_args()
 
+    from . import backend_bench as bb
     from . import paper_figs as pf
     from . import system_bench as sb
 
     benches = {
+        "backend": lambda: bb.bench_backends(full=args.full),
         "fig2": lambda: pf.fig2_solver_variants(full=args.full),
         "table3": lambda: pf.table3_realworld(full=args.full),
         "fig5": lambda: pf.fig5_adaptive_speedup(),

@@ -19,6 +19,18 @@ from repro.optim.grad_compress import CompressionConfig, compressed_bytes
 from .common import emit, lowrank_tensor, time_call
 
 
+def _bench_backends() -> tuple[str, ...]:
+    """Backend axis for the system benches: jnp backends everywhere; the
+    ``pallas`` rows only where they mean something (native TPU) or when
+    forced via ``ATUCKER_BENCH_PALLAS=1`` (interpret mode — correctness
+    trajectory, not perf)."""
+    import os
+    backends = ["matfree", "explicit"]
+    if jax.default_backend() == "tpu" or os.environ.get("ATUCKER_BENCH_PALLAS"):
+        backends.append("pallas")
+    return tuple(backends)
+
+
 def plan_bench(n_repeat: int = 8, batch: int = 8):
     """Plan/execute vs legacy per-call API (the tentpole's amortization claim).
 
@@ -26,10 +38,12 @@ def plan_bench(n_repeat: int = 8, batch: int = 8):
       * percall  — legacy ``sthosvd(x, ranks, methods="auto")``: selector +
         Python dispatch inside every call.
       * plan     — ``plan()`` once, then repeated ``execute``: frozen schedule,
-        one cached compiled sweep.
+        one cached compiled sweep — one row per ops backend.
       * batch    — ``execute_batch`` on a fleet of ``batch`` same-shaped
         tensors vs the per-item ``execute`` loop.
     """
+    from dataclasses import replace
+
     from repro.core import TuckerConfig, plan, sthosvd
 
     cases = [((96, 64, 48), (8, 8, 8)), ((256, 24, 24), (8, 6, 6))]
@@ -47,7 +61,17 @@ def plan_bench(n_repeat: int = 8, batch: int = 8):
             reps=n_repeat)
         emit(f"plan/{tag}/percall", t_percall, f"ranks={ranks}")
         emit(f"plan/{tag}/execute", t_plan,
-             f"speedup=x{t_percall / t_plan:.2f};schedule={'|'.join(p.methods)}")
+             f"speedup=x{t_percall / t_plan:.2f};schedule={'|'.join(p.methods)}"
+             f";backend={p.backend}")
+        for impl in _bench_backends():
+            if impl == p.backend:
+                continue                      # already timed above
+            pb = plan(x.shape, x.dtype, replace(cfg, impl=impl))
+            t_b = time_call(
+                lambda: jax.block_until_ready(pb.execute(x).tucker.core),
+                reps=n_repeat)
+            emit(f"plan/{tag}/execute[{impl}]", t_b,
+                 f"vs_{p.backend}=x{t_plan / t_b:.2f}")
 
         xs = jnp.stack([lowrank_tensor(dims, ranks, noise=0.05, seed=s)
                         for s in range(batch)])

@@ -36,10 +36,13 @@ def main():
     x = make_tensor(dims, ranks)
 
     # 1. plan: selector + cost model run here, never in the hot path
-    cfg = TuckerConfig(ranks=ranks, methods="auto")
+    # impl="auto" also picks the ops backend for this platform (TPU → the
+    # Pallas kernels, CPU/GPU → matfree jnp contractions)
+    cfg = TuckerConfig(ranks=ranks, methods="auto", impl="auto")
     p = plan(x.shape, x.dtype, cfg)
     print(f"tensor {dims} → ranks {ranks}")
-    print(f"planned schedule: {' | '.join(f'{s.mode}:{s.method}' for s in p.schedule)}")
+    print(f"planned schedule: {' | '.join(f'{s.mode}:{s.method}' for s in p.schedule)}"
+          f"   ops backend: {p.backend}")
     print(f"modeled cost: {p.total_flops / 1e6:.1f} MFLOP, "
           f"peak working set {p.peak_bytes / 2**20:.1f} MiB\n")
 

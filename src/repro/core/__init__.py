@@ -8,14 +8,24 @@ Public API:
   TuckerTensor — decomposition result (reconstruct, rel_error, ratio)
   Selector / default_selector / train_and_save — adaptive solver selector
   tensor_ops — matricization-free TTM/TTT/Gram (+ explicit baselines)
+  OpsBackend / register_backend / get_backend / resolve_backend /
+      backend_names — pluggable ops-backend registry (matfree | explicit |
+      pallas | custom) behind TuckerConfig.impl
 """
 
 # NOTE: the attribute ``repro.core.plan`` is the api.plan FUNCTION (the
 # front-door entry point), which shadows the ``plan`` submodule on the
 # package.  ``from repro.core.plan import ...`` still resolves the module
 # (sys.modules), and ``plan_lib`` aliases it for attribute-style access.
-from . import cost_model, plan as plan_lib, tensor_ops, variants
+from . import backend, cost_model, plan as plan_lib, tensor_ops, variants
 from .api import TuckerConfig, TuckerPlan, decompose, plan
+from .backend import (
+    OpsBackend,
+    backend_names,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
 from .plan import ModeStep, resolve_schedule
 from .selector import Selector, default_selector, extract_features
 from .solvers import ALS, EIG, SVD, als_solve, eig_solve, svd_solve
@@ -30,10 +40,11 @@ from .sthosvd import (
 
 __all__ = [
     "ALS", "EIG", "SVD",
-    "ModeStep", "Selector", "SthosvdResult",
+    "ModeStep", "OpsBackend", "Selector", "SthosvdResult",
     "TuckerConfig", "TuckerPlan", "TuckerTensor",
-    "als_solve", "cost_model", "decompose", "default_selector", "eig_solve",
-    "extract_features", "plan", "plan_lib", "resolve_schedule", "sthosvd",
-    "sthosvd_als", "sthosvd_eig", "sthosvd_svd", "svd_solve", "tensor_ops",
-    "variants",
+    "als_solve", "backend", "backend_names", "cost_model", "decompose",
+    "default_selector", "eig_solve", "extract_features", "get_backend",
+    "plan", "plan_lib", "register_backend", "resolve_backend",
+    "resolve_schedule", "sthosvd", "sthosvd_als", "sthosvd_eig",
+    "sthosvd_svd", "svd_solve", "tensor_ops", "variants",
 ]

@@ -12,7 +12,7 @@ this module moves ALL input-adaptive decisions to a one-time ``plan`` step:
 
 Because the per-mode solver schedule and mode order are frozen in the plan,
 the entire sweep traces as a single XLA program, cached process-wide by
-``(shape, dtype, schedule, variant, impl, als_iters, compute_dtype)`` — so
+``(shape, dtype, schedule+backend, variant, als_iters, compute_dtype)`` — so
 repeated executes on same-shaped inputs cost zero recompiles and zero
 selector invocations.  Plans are JSON-serializable (``save``/``load``,
 mirroring ``Selector.save``) so a schedule tuned on one box can ship to
@@ -29,6 +29,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from .backend import backend_names, get_backend, resolve_backend
 from .plan import (
     ModeStep,
     TimedSelector,
@@ -43,8 +44,6 @@ from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor
 
 PLAN_FORMAT_VERSION = 1
 
-_IMPLS = ("matfree", "explicit")
-
 
 @dataclass(frozen=True)
 class TuckerConfig:
@@ -56,6 +55,11 @@ class TuckerConfig:
     compute_dtype is the precision policy: inputs are cast to it before the
     sweep (e.g. "float32" to decompose bf16 weights at full precision); the
     default ``None`` keeps the input dtype.
+
+    ``impl`` names an ops backend from :mod:`repro.core.backend` (``matfree``
+    | ``explicit`` | ``pallas`` | any custom-registered name) or ``"auto"``
+    to let ``plan()`` pick the best backend for the current platform and
+    compute dtype; the resolved choice is frozen into the plan's schedule.
     """
     ranks: tuple[int, ...]
     variant: str = "sthosvd"
@@ -76,8 +80,8 @@ class TuckerConfig:
         if self.variant not in VARIANTS:
             raise ValueError(f"unknown variant {self.variant!r}; "
                              f"expected one of {VARIANTS}")
-        if self.impl not in _IMPLS:
-            raise ValueError(f"unknown impl {self.impl!r}; expected {_IMPLS}")
+        if self.impl != "auto":
+            get_backend(self.impl)   # ValueError on unregistered names
         if self.als_iters < 1 or self.hooi_iters < 0:
             raise ValueError("als_iters must be ≥1 and hooi_iters ≥0")
 
@@ -123,7 +127,7 @@ def clear_sweep_cache() -> None:
 
 
 def _make_sweep(p: "TuckerPlan", batched: bool) -> Callable:
-    steps = p.schedule
+    steps = p.schedule   # each step carries its resolved ops backend
     cfg = p.config
     n_init = len(p.shape)  # HOOI: first full sweep is the st-HOSVD init
     cdtype = jnp.dtype(cfg.compute_dtype) if cfg.compute_dtype else None
@@ -133,13 +137,10 @@ def _make_sweep(p: "TuckerPlan", batched: bool) -> Callable:
         if cdtype is not None:
             x = x.astype(cdtype)
         if cfg.variant == "sthosvd":
-            return sweep_sthosvd(x, steps, als_iters=cfg.als_iters,
-                                 impl=cfg.impl)
+            return sweep_sthosvd(x, steps, als_iters=cfg.als_iters)
         if cfg.variant == "thosvd":
-            return sweep_thosvd(x, steps, als_iters=cfg.als_iters,
-                                impl=cfg.impl)
-        return sweep_hooi(x, steps, als_iters=cfg.als_iters, impl=cfg.impl,
-                          n_init=n_init)
+            return sweep_thosvd(x, steps, als_iters=cfg.als_iters)
+        return sweep_hooi(x, steps, als_iters=cfg.als_iters, n_init=n_init)
 
     return jax.jit(jax.vmap(sweep) if batched else sweep)
 
@@ -165,6 +166,13 @@ class TuckerPlan:
 
     # -- introspection -------------------------------------------------------
     @property
+    def backend(self) -> str:
+        """The resolved ops backend this plan's steps run on (``config.impl``
+        may be ``"auto"``; this is what it resolved to at plan time)."""
+        names = {s.backend for s in self.schedule}
+        return self.schedule[0].backend if len(names) == 1 else "mixed"
+
+    @property
     def methods(self) -> tuple[str, ...]:
         """Resolved solver per mode (first visit order, sorted by mode)."""
         first: dict[int, str] = {}
@@ -181,9 +189,12 @@ class TuckerPlan:
         return max(s.peak_bytes for s in self.schedule)
 
     def _cache_key(self, batched: bool) -> tuple:
+        # keyed on the RESOLVED per-step backend, not config.impl: two plans
+        # whose "auto" resolved identically share one compiled sweep
         return (self.shape, self.dtype,
-                tuple((s.mode, s.method, s.r_n) for s in self.schedule),
-                self.config.variant, self.config.impl, self.config.als_iters,
+                tuple((s.mode, s.method, s.r_n, s.backend)
+                      for s in self.schedule),
+                self.config.variant, self.config.als_iters,
                 self.config.compute_dtype, batched)
 
     def _sweep(self, batched: bool) -> Callable:
@@ -207,7 +218,8 @@ class TuckerPlan:
         core, factors = self._sweep(batched=False)(x)
         return SthosvdResult(
             tucker=TuckerTensor(core=core, factors=list(factors)),
-            trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0)
+            trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
+                             backend=s.backend)
                    for s in self.schedule],
             select_overhead_s=0.0)
 
@@ -226,7 +238,8 @@ class TuckerPlan:
             out.append(SthosvdResult(
                 tucker=TuckerTensor(core=cores[b],
                                     factors=[u[b] for u in factors]),
-                trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0)
+                trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
+                                 backend=s.backend)
                        for s in self.schedule],
                 select_overhead_s=0.0))
         return out
@@ -276,12 +289,15 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
     """Resolve ``config`` against a concrete (shape, dtype) → ``TuckerPlan``.
 
     All selector/cost-model queries happen here, against the statically known
-    per-mode problem sizes; ``TuckerPlan.execute`` never selects again.
+    per-mode problem sizes, and ``config.impl`` (possibly ``"auto"``) is
+    resolved through the backend registry against the current platform and
+    compute dtype; ``TuckerPlan.execute`` never selects or resolves again.
     """
     shape = tuple(int(s) for s in shape)
     dtype = jnp.dtype(dtype)
     compute_dtype = jnp.dtype(config.compute_dtype) if config.compute_dtype \
         else dtype
+    backend = resolve_backend(config.impl, dtype=compute_dtype)
     timed = None
     if config.methods == "auto":
         if selector is None:
@@ -292,7 +308,7 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
         shape, config.ranks, variant=config.variant, methods=config.methods,
         mode_order=config.mode_order, selector=selector,
         als_iters=config.als_iters, hooi_iters=config.hooi_iters,
-        itemsize=compute_dtype.itemsize)
+        itemsize=compute_dtype.itemsize, backend=backend.name)
     return TuckerPlan(shape=shape, dtype=str(dtype), config=config,
                       schedule=schedule,
                       select_seconds=timed.seconds if timed else 0.0)

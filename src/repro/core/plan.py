@@ -28,6 +28,7 @@ from typing import Callable, Sequence
 import jax
 
 from . import tensor_ops as T
+from .backend import get_backend
 from .cost_model import als_flops, eig_flops, svd_flops
 from .solvers import ALS, DEFAULT_ALS_ITERS, SOLVERS
 
@@ -36,7 +37,8 @@ VARIANTS = ("sthosvd", "thosvd", "hooi")
 
 @dataclass(frozen=True)
 class ModeStep:
-    """One frozen mode solve: which solver runs on which (sub)problem."""
+    """One frozen mode solve: which solver runs on which (sub)problem,
+    through which ops backend."""
     mode: int
     method: str          # "eig" | "als" | "svd"
     i_n: int             # mode dimension at solve time
@@ -44,17 +46,19 @@ class ModeStep:
     j_n: int             # product of the remaining dims at solve time
     flops: float         # modeled solver cost (cost_model Eq. 4/5)
     peak_bytes: int      # modeled peak working set of this step
+    backend: str = "matfree"   # resolved ops backend (never "auto")
 
     def to_dict(self) -> dict:
         return {"mode": self.mode, "method": self.method, "i_n": self.i_n,
                 "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
-                "peak_bytes": self.peak_bytes}
+                "peak_bytes": self.peak_bytes, "backend": self.backend}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModeStep":
         return cls(mode=int(d["mode"]), method=str(d["method"]),
                    i_n=int(d["i_n"]), r_n=int(d["r_n"]), j_n=int(d["j_n"]),
-                   flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]))
+                   flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]),
+                   backend=str(d.get("backend", "matfree")))
 
 
 class TimedSelector:
@@ -129,25 +133,36 @@ def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
                      itemsize: int) -> int:
     """Modeled peak working set: input + output tensors plus solver scratch
     (EIG: the I_n×I_n Gram; ALS: L/R iterates; SVD: the explicit unfolding
-    plus its left singular block)."""
-    io = i_n * j_n + r_n * j_n
+    plus its left singular block).
+
+    I/O tensors live in the compute dtype (``itemsize``); solver scratch
+    lives in the *accumulation* dtype — sub-fp32 inputs (bf16/fp16) are
+    solved in fp32 (see solvers.py ``cdtype``), so their scratch is 4-byte,
+    and ALS additionally materializes an fp32 cast of the whole input.
+    """
+    accum = max(itemsize, 4)   # bf16/fp16 accumulate in fp32; fp64 stays 8
+    io = (i_n * j_n + r_n * j_n) * itemsize
     if method == "eig":
-        scratch = i_n * i_n
+        scratch = i_n * i_n * accum
     elif method == "als":
-        scratch = 2 * (i_n * r_n + r_n * j_n) + 2 * r_n * r_n
-    else:  # svd materializes the unfolding and U
-        scratch = i_n * j_n + i_n * min(i_n, j_n)
-    return int((io + scratch) * itemsize)
+        scratch = (2 * (i_n * r_n + r_n * j_n) + 2 * r_n * r_n) * accum
+        if accum != itemsize:
+            scratch += i_n * j_n * accum   # yc: fp32 cast of the input
+    else:  # svd materializes the unfolding and U in the compute dtype
+        scratch = (i_n * j_n + i_n * min(i_n, j_n)) * accum
+    return int(io + scratch)
 
 
 def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
-               als_iters: int, itemsize: int) -> ModeStep:
+               als_iters: int, itemsize: int, backend: str) -> ModeStep:
     m = selector(i_n=i_n, r_n=r_n, j_n=j_n) if method is None else method
     if m not in SOLVERS:
         raise ValueError(f"unknown solver {m!r}")
+    scale = get_backend(backend).cost_scale
     return ModeStep(mode=mode, method=m, i_n=i_n, r_n=r_n, j_n=j_n,
-                    flops=_step_cost(m, i_n, r_n, j_n, als_iters),
-                    peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize))
+                    flops=scale * _step_cost(m, i_n, r_n, j_n, als_iters),
+                    peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize),
+                    backend=backend)
 
 
 def resolve_schedule(
@@ -162,6 +177,7 @@ def resolve_schedule(
     hooi_iters: int = 3,
     include_init: bool = True,
     itemsize: int = 4,
+    backend: str = "matfree",
 ) -> tuple[ModeStep, ...]:
     """Resolve the full per-mode solver schedule ahead of execution.
 
@@ -169,9 +185,14 @@ def resolve_schedule(
     derived from ``shape``/``ranks`` alone, so selection runs zero times at
     execute time.  For HOOI, ``include_init=False`` drops the st-HOSVD init
     sweep (caller supplies its own initial factors).
+
+    ``itemsize`` is the byte width of the *compute* dtype (callers derive it
+    from ``TuckerConfig.compute_dtype`` or the input dtype — never assume 4)
+    and ``backend`` the resolved ops-backend name stamped on every step.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+    get_backend(backend)   # concrete, registered backend only (never "auto")
     shape = tuple(int(s) for s in shape)
     ranks = validate_ranks(shape, ranks)
     n = len(shape)
@@ -193,7 +214,8 @@ def resolve_schedule(
         for mode in range(n):
             i_n, r_n = shape[mode], ranks[mode]
             steps.append(_make_step(mode, method_for(mode), selector,
-                                    i_n, r_n, size // i_n, als_iters, itemsize))
+                                    i_n, r_n, size // i_n, als_iters,
+                                    itemsize, backend))
         return tuple(steps)
 
     # st-HOSVD sweep (also HOOI's init): the tensor shrinks between steps
@@ -203,7 +225,8 @@ def resolve_schedule(
             i_n, r_n = cur[mode], ranks[mode]
             j_n = math.prod(cur) // i_n
             steps.append(_make_step(mode, method_for(mode), selector,
-                                    i_n, r_n, j_n, als_iters, itemsize))
+                                    i_n, r_n, j_n, als_iters, itemsize,
+                                    backend))
             cur[mode] = r_n
     if variant == "sthosvd":
         return tuple(steps)
@@ -216,7 +239,8 @@ def resolve_schedule(
             i_n, r_n = shape[mode], ranks[mode]
             j_n = rank_prod // r_n
             steps.append(_make_step(mode, method_for(mode), selector,
-                                    i_n, r_n, j_n, als_iters, itemsize))
+                                    i_n, r_n, j_n, als_iters, itemsize,
+                                    backend))
     return tuple(steps)
 
 
@@ -225,8 +249,13 @@ def resolve_schedule(
 # ---------------------------------------------------------------------------
 
 def solve_step(y: jax.Array, step: ModeStep, *, als_iters: int = DEFAULT_ALS_ITERS,
-               impl: str = "matfree"):
-    """THE solver dispatch point: every variant's mode solve funnels here."""
+               impl: str | None = None):
+    """THE solver dispatch point: every variant's mode solve funnels here.
+
+    ``impl`` overrides the step's recorded ops backend; by default each step
+    runs on the backend frozen into it at schedule-resolution time.
+    """
+    impl = step.backend if impl is None else impl
     if step.method == ALS:
         return SOLVERS[ALS](y, step.mode, step.r_n, num_iters=als_iters, impl=impl)
     return SOLVERS[step.method](y, step.mode, step.r_n, impl=impl)
@@ -234,7 +263,7 @@ def solve_step(y: jax.Array, step: ModeStep, *, als_iters: int = DEFAULT_ALS_ITE
 
 def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
                  sequential: bool, als_iters: int = DEFAULT_ALS_ITERS,
-                 impl: str = "matfree", block_until_ready: bool = False):
+                 impl: str | None = None, block_until_ready: bool = False):
     """Eager runner: per-mode jitted solves with wall-clock per step.
 
     ``sequential=True`` threads the shrinking tensor through the steps
@@ -265,7 +294,8 @@ def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
 # Whole-sweep pure functions (compiled as ONE program by api.TuckerPlan)
 # ---------------------------------------------------------------------------
 
-def sweep_sthosvd(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str):
+def sweep_sthosvd(x, steps: Sequence[ModeStep], *, als_iters: int,
+                  impl: str | None = None):
     y = x
     factors: dict[int, jax.Array] = {}
     for step in steps:
@@ -275,7 +305,8 @@ def sweep_sthosvd(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str):
     return y, [factors[m] for m in range(x.ndim)]
 
 
-def sweep_thosvd(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str):
+def sweep_thosvd(x, steps: Sequence[ModeStep], *, als_iters: int,
+                 impl: str | None = None):
     factors = [solve_step(x, step, als_iters=als_iters, impl=impl).u
                for step in steps]
     core = x
@@ -284,8 +315,8 @@ def sweep_thosvd(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str):
     return core, factors
 
 
-def sweep_hooi(x, steps: Sequence[ModeStep], *, als_iters: int, impl: str,
-               n_init: int):
+def sweep_hooi(x, steps: Sequence[ModeStep], *, als_iters: int, n_init: int,
+               impl: str | None = None):
     """HOOI with its st-HOSVD init inlined: ``steps[:n_init]`` is the init
     sweep (sequential shrink), the rest are refinement solves on x projected
     over every factor but the step's mode."""

@@ -9,9 +9,11 @@ and ``y_new`` is the tensor with mode ``n`` shrunk to R_n:
        Y_(n) ≈ L R^T, then QR(L) for orthonormality, core = TTM(R-tensor, R̂).
   SVD  (paper Alg. 1; baseline only — always slowest, kept for Fig. 2).
 
-Everything is matricization-free (built on tensor_ops TTM/TTT/Gram); the
-``impl='explicit'`` switch routes through the unfold-based baseline for the
-Fig. 8 comparison.
+Everything is matricization-free (built on whichever registered
+:mod:`repro.core.backend` supplies TTM/TTT/Gram); ``impl`` names an ops
+backend — ``matfree`` (jnp contractions), ``explicit`` (unfold-based
+baseline for the Fig. 8 comparison), ``pallas`` (hand-written TPU kernels),
+or any custom-registered name.
 """
 
 from __future__ import annotations
@@ -23,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from . import tensor_ops as T
+from .backend import backend_ops, get_backend
 
 DEFAULT_ALS_ITERS = 5  # paper Sec. III-B default
 
@@ -32,23 +35,15 @@ class SolveResult(NamedTuple):
     y_new: jax.Array   # tensor with mode shrunk to R_n
 
 
-def _ops(impl: str):
-    if impl == "matfree":
-        return T.ttm, T.gram, T.ttt
-    if impl == "explicit":
-        return T.ttm_explicit, T.gram_explicit, T.ttt_explicit
-    raise ValueError(f"unknown impl {impl!r}")
-
-
 # ---------------------------------------------------------------------------
 # EIG solver
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("mode", "rank", "impl"))
 def eig_solve(y: jax.Array, mode: int, rank: int, *, impl: str = "matfree") -> SolveResult:
-    ttm, gram, _ = _ops(impl)
+    ttm, gram, _ = backend_ops(impl)
     s = gram(y, mode)                                   # (I_n, I_n), fp32+ accum
-    _, vecs = jnp.linalg.eigh(s.astype(jnp.float32) if s.dtype == jnp.bfloat16 else s)
+    _, vecs = jnp.linalg.eigh(s.astype(jnp.promote_types(s.dtype, jnp.float32)))
     u = vecs[:, -rank:][:, ::-1].astype(y.dtype)        # leading R_n eigvecs
     y_new = ttm(y, u.T, mode)                           # core update
     return SolveResult(u, y_new)
@@ -63,9 +58,11 @@ def als_solve(y: jax.Array, mode: int, rank: int, *,
               num_iters: int = DEFAULT_ALS_ITERS,
               seed: int = 0,
               impl: str = "matfree") -> SolveResult:
-    ttm, gram, ttt = _ops(impl)
+    ttm, gram, ttt = backend_ops(impl)
     i_n = y.shape[mode]
-    cdtype = jnp.float32 if y.dtype == jnp.bfloat16 else y.dtype
+    # sub-fp32 inputs (bf16/fp16) iterate in fp32 (the peak_bytes model in
+    # plan.py assumes exactly this); fp32/fp64 keep their own precision
+    cdtype = jnp.promote_types(y.dtype, jnp.float32)
     key = jax.random.PRNGKey(seed)
     l0 = jax.random.normal(key, (i_n, rank), dtype=cdtype)
 
@@ -107,9 +104,19 @@ def _spd_inverse(a: jax.Array) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("mode", "rank", "impl"))
 def svd_solve(y: jax.Array, mode: int, rank: int, *, impl: str = "matfree") -> SolveResult:
-    # The SVD baseline inherently matricizes (paper Alg. 1 line 3).
+    """SVD mode solve (paper Alg. 1 line 3): thin SVD of the unfolding.
+
+    The SVD solver *inherently* matricizes — the decomposition is defined on
+    the explicit I_n×J_n unfolding, so no backend can supply a
+    matricization-free version (this is why ``OpsBackend.matricizes`` is a
+    backend property but SVD steps pay the unfold copy on every backend).
+    ``impl`` is still validated against the registry so unknown backends are
+    rejected here exactly as in the EIG/ALS solvers, instead of being
+    silently accepted.
+    """
+    get_backend(impl)  # reject unknown backends; ops themselves unused
     y2 = T.unfold(y, mode)
-    cdtype = jnp.float32 if y.dtype == jnp.bfloat16 else y.dtype
+    cdtype = jnp.promote_types(y.dtype, jnp.float32)
     u, s, vt = jnp.linalg.svd(y2.astype(cdtype), full_matrices=False)
     u = u[:, :rank]
     core2 = s[:rank, None] * vt[:rank]                  # Σ V^T

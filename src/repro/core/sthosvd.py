@@ -61,6 +61,7 @@ class ModeTrace:
     r_n: int
     j_n: int
     seconds: float
+    backend: str = "matfree"   # ops backend the solve ran on
 
 
 @dataclass
@@ -90,9 +91,14 @@ def sthosvd(
     ``mode_order`` defaults to the paper's 1..N sweep; adaptive shrink-ratio
     ordering (beyond-paper, DESIGN.md §9.3) is available via
     ``mode_order="shrink"``.
+
+    ``impl`` names an ops backend (``matfree`` | ``explicit`` | ``pallas`` |
+    custom-registered) or ``"auto"`` for the platform default.
     """
+    from .backend import resolve_backend
     from .plan import TimedSelector, resolve_schedule, run_schedule
 
+    backend = resolve_backend(impl, dtype=x.dtype)
     timed = None
     if methods == "auto":
         if selector is None:
@@ -102,12 +108,13 @@ def sthosvd(
     schedule = resolve_schedule(
         x.shape, ranks, variant="sthosvd", methods=methods,
         mode_order=mode_order, selector=selector, als_iters=als_iters,
-        itemsize=x.dtype.itemsize)
+        itemsize=x.dtype.itemsize, backend=backend.name)
 
     core, factors, seconds = run_schedule(
-        x, schedule, sequential=True, als_iters=als_iters, impl=impl,
+        x, schedule, sequential=True, als_iters=als_iters,
         block_until_ready=block_until_ready)
-    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt)
+    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
+                       backend=s.backend)
              for s, dt in zip(schedule, seconds)]
     tucker = TuckerTensor(core=core, factors=[factors[m] for m in range(x.ndim)])
     return SthosvdResult(tucker=tucker, trace=trace,

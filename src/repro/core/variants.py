@@ -25,6 +25,7 @@ import time
 import jax
 
 from . import tensor_ops as T
+from .backend import resolve_backend
 from .plan import TimedSelector, resolve_schedule, run_schedule, solve_step
 from .solvers import DEFAULT_ALS_ITERS
 from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor, sthosvd
@@ -42,15 +43,17 @@ def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
            impl: str = "matfree",
            block_until_ready: bool = False) -> SthosvdResult:
     """Truncated HOSVD: factors from the original tensor, one projection."""
+    backend = resolve_backend(impl, dtype=x.dtype)
     timed = _auto_selector(methods, selector)
     schedule = resolve_schedule(
         x.shape, ranks, variant="thosvd", methods=methods,
         selector=timed or selector, als_iters=als_iters,
-        itemsize=x.dtype.itemsize)
+        itemsize=x.dtype.itemsize, backend=backend.name)
     _, factors, seconds = run_schedule(
-        x, schedule, sequential=False, als_iters=als_iters, impl=impl,
+        x, schedule, sequential=False, als_iters=als_iters,
         block_until_ready=block_until_ready)
-    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt)
+    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
+                       backend=s.backend)
              for s, dt in zip(schedule, seconds)]
     core = x
     for mode in range(x.ndim):
@@ -70,6 +73,7 @@ def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
     with the flexible (selector-driven) solver.  Error is non-increasing in
     exact arithmetic; typically converges in 2–5 sweeps.
     """
+    backend = resolve_backend(impl, dtype=x.dtype)
     timed = _auto_selector(methods, selector)
     base = init or sthosvd(x, ranks, methods=methods,
                            selector=timed or selector, als_iters=als_iters,
@@ -80,19 +84,20 @@ def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
     schedule = resolve_schedule(
         x.shape, ranks, variant="hooi", methods=methods,
         selector=timed or selector, als_iters=als_iters, hooi_iters=n_iters,
-        include_init=False, itemsize=x.dtype.itemsize)
+        include_init=False, itemsize=x.dtype.itemsize, backend=backend.name)
     for step in schedule:
         y = x
         for m, u in enumerate(factors):
             if m != step.mode:
                 y = T.ttm(y, u.T, m)
         t0 = time.perf_counter()
-        res = solve_step(y, step, als_iters=als_iters, impl=impl)
+        res = solve_step(y, step, als_iters=als_iters)
         if block_until_ready:
             jax.block_until_ready(res.u)
         factors[step.mode] = res.u
         trace.append(ModeTrace(step.mode, step.method, step.i_n, step.r_n,
-                               step.j_n, time.perf_counter() - t0))
+                               step.j_n, time.perf_counter() - t0,
+                               backend=step.backend))
 
     core = x
     for mode, u in enumerate(factors):

@@ -1,5 +1,10 @@
 """jit'd public wrappers for the a-Tucker Pallas kernels.
 
+These are the primitives behind the ``pallas`` ops backend
+(:mod:`repro.core.backend`): ``TuckerConfig(impl="pallas")`` — or
+``impl="auto"`` on TPU — routes every TTM/TTT/Gram of a plan's sweep through
+this module.
+
 Dispatch mirrors the paper's Fig. 4 structure:
   mode == 0    → single GEMM   u @ X_(0-view)          (matmul kernel)
   mode == N-1  → single GEMM   X_(view) @ uᵀ           (matmul kernel)

@@ -18,7 +18,7 @@ and same-shaped groups execute as a single vmapped program.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
@@ -131,14 +131,28 @@ class TuckerBatchEngine:
     executes each wave of same-shaped requests as one vmapped program via
     ``TuckerPlan.execute_batch`` (singleton groups fall back to ``execute``
     so they share the unbatched compiled sweep).
+
+    ``impl`` pins every plan the engine builds to one ops backend (overriding
+    each request config's ``impl``) — the serving-side backend axis; the
+    default ``None`` honours per-request configs (typically ``"auto"``,
+    resolved per platform at plan time).  ``stats["backends"]`` counts
+    requests per resolved backend.
     """
 
-    def __init__(self, selector=None):
+    def __init__(self, selector=None, *, impl: str | None = None):
         self._selector = selector
+        self._impl = impl
         self._plans: dict[tuple, TuckerPlan] = {}
-        self.stats = {"plans_built": 0, "requests": 0, "batches": 0}
+        self.stats = {"plans_built": 0, "requests": 0, "batches": 0,
+                      "backends": {}}
+
+    def _pinned(self, config: TuckerConfig) -> TuckerConfig:
+        if self._impl is not None and config.impl != self._impl:
+            config = replace(config, impl=self._impl)
+        return config
 
     def plan_for(self, shape, dtype, config: TuckerConfig) -> TuckerPlan:
+        config = self._pinned(config)
         key = (tuple(shape), str(jnp.dtype(dtype)), config)
         p = self._plans.get(key)
         if p is None:
@@ -151,7 +165,9 @@ class TuckerBatchEngine:
         groups: dict[tuple, list[TuckerRequest]] = {}
         for r in requests:
             x = jnp.asarray(r.x)
-            key = (tuple(x.shape), str(x.dtype), r.config)
+            # group on the pinned config: requests differing only in the
+            # overridden impl field still batch into one vmapped wave
+            key = (tuple(x.shape), str(x.dtype), self._pinned(r.config))
             groups.setdefault(key, []).append(r)
         for (shape, dtype, config), grp in groups.items():
             p = self.plan_for(shape, dtype, config)
@@ -163,4 +179,6 @@ class TuckerBatchEngine:
                     r.result = res
             self.stats["requests"] += len(grp)
             self.stats["batches"] += 1
+            per_backend = self.stats["backends"]
+            per_backend[p.backend] = per_backend.get(p.backend, 0) + len(grp)
         return requests
