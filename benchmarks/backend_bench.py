@@ -40,6 +40,12 @@ SWEEP = {False: ((24, 20, 16), (4, 4, 4)),
          True: ((256, 128, 96), (16, 16, 16))}
 
 
+def _single_device_backends() -> list[str]:
+    # mesh-requiring backends (sharded) have their own scaling bench
+    # (benchmarks/sharded_bench.py) and only duplicate matfree's local ops here
+    return [n for n in backend_names() if not get_backend(n).requires_mesh]
+
+
 def bench_backends(full: bool = False, reps: int = 3) -> list[dict]:
     native = jax.default_backend() == "tpu"
     rows: list[dict] = []
@@ -51,7 +57,7 @@ def bench_backends(full: bool = False, reps: int = 3) -> list[dict]:
         y = jnp.asarray(rng.standard_normal(
             shape[:mode] + (r,) + shape[mode + 1:]), jnp.float32)
         ref_ttm = ref_gram = ref_ttt = None
-        for name in backend_names():
+        for name in _single_device_backends():
             b = get_backend(name)
             ttm, gram, ttt = b.ops()
             for op, fn in (("ttm", lambda: ttm(x, u, mode)),
@@ -80,7 +86,7 @@ def bench_backends(full: bool = False, reps: int = 3) -> list[dict]:
 
     dims, ranks = SWEEP[full]
     x = lowrank_tensor(dims, ranks, noise=0.05)
-    for name in backend_names():
+    for name in _single_device_backends():
         cfg = TuckerConfig(ranks=ranks, methods="eig", impl=name)
         p = plan(x.shape, x.dtype, cfg)
         t = time_call(lambda: jax.block_until_ready(p.execute(x).tucker.core),

@@ -1,0 +1,104 @@
+"""Sharded-backend scaling bench: st-HOSVD on 1/2/4/8 virtual devices vs
+single-device matfree.
+
+Forces 8 virtual host devices (before jax initializes), builds 1-axis
+meshes over device subsets, and times one planned sweep per mesh size plus
+the matfree baseline.  On a single physical CPU the virtual devices share
+the same silicon, so wall times measure SCHEDULE OVERHEAD (shard_map,
+psums, reshard all-to-alls), not speedup — the row file is a correctness +
+overhead-trajectory signal for CI; real scaling needs real chips.
+
+Prints the usual ``name,us_per_call,derived`` CSV rows and writes a
+``BENCH_sharded.json`` row file (same shape as BENCH_backend.json) for the
+per-PR perf trajectory.
+
+Usage:  python -m benchmarks.sharded_bench [--full] [--out BENCH_sharded.json]
+"""
+
+from __future__ import annotations
+
+import os
+
+# must precede jax init; append so externally-set flags survive
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import json
+import platform as _platform
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import TuckerConfig, plan
+
+from .common import emit, lowrank_tensor, time_call
+
+# dims divisible by 8 so every mesh size shards evenly; full = larger tensor
+DIMS = {False: ((64, 48, 40), (8, 8, 8)),
+        True: ((256, 192, 160), (16, 16, 16))}
+
+
+def bench_sharded(full: bool = False, reps: int = 3) -> list[dict]:
+    dims, ranks = DIMS[full]
+    x = lowrank_tensor(dims, ranks, noise=0.05)
+    tag = "x".join(map(str, dims))
+    rows: list[dict] = []
+
+    def run(cfg, name, n_devices):
+        p = plan(x.shape, x.dtype, cfg)
+        t = time_call(lambda: jax.block_until_ready(p.execute(x).tucker.core),
+                      reps=reps)
+        err = float(p.execute(x).tucker.rel_error(x))
+        emit(f"sharded/{name}/{tag}", t, f"rel_err={err:.4f}")
+        rows.append({"bench": "sweep", "backend": p.backend,
+                     "n_devices": n_devices, "methods": cfg.methods,
+                     "shape": list(dims), "ranks": list(ranks),
+                     "us_per_call": t * 1e6, "rel_err": err})
+        return t
+
+    base = run(TuckerConfig(ranks=ranks, methods="eig", impl="matfree"),
+               "matfree_1dev", 1)
+
+    devices = jax.devices()
+    for k in (1, 2, 4, 8):
+        if k > len(devices):
+            break
+        mesh = Mesh(np.array(devices[:k]), ("data",))
+        t = run(TuckerConfig(ranks=ranks, methods="eig", impl="sharded",
+                             mesh=mesh), f"eig_{k}dev", k)
+        rows[-1]["overhead_vs_matfree"] = t / base
+
+    if len(devices) >= 8:
+        mesh = Mesh(np.array(devices[:8]), ("data",))
+        for methods in ("als", "auto"):
+            run(TuckerConfig(ranks=ranks, methods=methods, impl="sharded",
+                             mesh=mesh), f"{methods}_8dev", 8)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger tensor (slower, more signal per psum)")
+    ap.add_argument("--out", default="BENCH_sharded.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = bench_sharded(full=args.full)
+    if args.out:
+        doc = {"bench": "sharded", "jax_backend": jax.default_backend(),
+               "host": _platform.machine(), "full": args.full,
+               "n_devices_available": len(jax.devices()), "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Markdown table of BENCH_*.json rows — the per-run perf trajectory.
+
+Reads one or more row files written by the benches (backend_bench,
+sharded_bench, system benches) and prints a GitHub-flavoured markdown
+table to stdout; CI appends it to ``$GITHUB_STEP_SUMMARY`` so the numbers
+are visible on every run without downloading artifacts.
+
+Usage:  python -m benchmarks.summary_md [BENCH_a.json BENCH_b.json ...]
+        (no args: globs BENCH_*.json in the working directory)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+#: columns shown first, in this order, when any row carries them; remaining
+#: keys are folded into a trailing ``notes`` column
+PREFERRED = ("source", "bench", "backend", "op", "methods", "n_devices",
+             "shape", "ranks", "us_per_call", "rel_err")
+SKIP = {"mode", "r", "native"}   # low-signal noise in a cross-bench table
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:,.1f}" if abs(v) >= 10 else f"{v:.4g}"
+    if isinstance(v, list):
+        return "×".join(str(i) for i in v)
+    return "" if v is None else str(v)
+
+
+def load_rows(paths: list[Path]) -> list[dict]:
+    rows = []
+    for path in paths:
+        doc = json.loads(path.read_text())
+        for r in doc.get("rows", []):
+            rows.append({"source": path.name,
+                         "bench": f'{doc.get("bench", "?")}/{r.get("bench", "?")}',
+                         **{k: v for k, v in r.items() if k != "bench"}})
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    if not rows:
+        return "_no BENCH_*.json files found_"
+    cols = [c for c in PREFERRED if any(c in r for r in rows)]
+    extras = sorted({k for r in rows for k in r}
+                    - set(cols) - SKIP)
+    out = ["### Bench trajectory (" + f"{len(rows)} rows)", ""]
+    out.append("| " + " | ".join(cols + ["notes"]) + " |")
+    out.append("|" + "---|" * (len(cols) + 1))
+    for r in rows:
+        notes = ", ".join(f"{k}={_fmt(r[k])}" for k in extras if k in r)
+        out.append("| " + " | ".join(_fmt(r.get(c)) for c in cols)
+                   + f" | {notes} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    paths = [Path(p) for p in sys.argv[1:]] or sorted(Path().glob("BENCH_*.json"))
+    print(to_markdown(load_rows([p for p in paths if p.exists()])))
+
+
+if __name__ == "__main__":
+    main()

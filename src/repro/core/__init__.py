@@ -10,7 +10,9 @@ Public API:
   tensor_ops — matricization-free TTM/TTT/Gram (+ explicit baselines)
   OpsBackend / register_backend / get_backend / resolve_backend /
       backend_names — pluggable ops-backend registry (matfree | explicit |
-      pallas | custom) behind TuckerConfig.impl
+      pallas | sharded | custom) behind TuckerConfig.impl
+  distributed — mesh execution engine behind the ``sharded`` backend
+      (sthosvd_distributed legacy entry, pick_shard_mode, shard_map sweeps)
 """
 
 # NOTE: the attribute ``repro.core.plan`` is the api.plan FUNCTION (the
@@ -18,7 +20,14 @@ Public API:
 # package.  ``from repro.core.plan import ...`` still resolves the module
 # (sys.modules), and ``plan_lib`` aliases it for attribute-style access.
 from . import backend, cost_model, plan as plan_lib, tensor_ops, variants
-from .api import TuckerConfig, TuckerPlan, decompose, plan
+from .api import (
+    TuckerConfig,
+    TuckerPlan,
+    decompose,
+    mesh_from_spec,
+    mesh_spec,
+    plan,
+)
 from .backend import (
     OpsBackend,
     backend_names,
@@ -44,7 +53,7 @@ __all__ = [
     "TuckerConfig", "TuckerPlan", "TuckerTensor",
     "als_solve", "backend", "backend_names", "cost_model", "decompose",
     "default_selector", "eig_solve", "extract_features", "get_backend",
-    "plan", "plan_lib", "register_backend", "resolve_backend",
-    "resolve_schedule", "sthosvd", "sthosvd_als", "sthosvd_eig",
-    "sthosvd_svd", "svd_solve", "tensor_ops", "variants",
+    "mesh_from_spec", "mesh_spec", "plan", "plan_lib", "register_backend",
+    "resolve_backend", "resolve_schedule", "sthosvd", "sthosvd_als",
+    "sthosvd_eig", "sthosvd_svd", "svd_solve", "tensor_ops", "variants",
 ]

@@ -22,12 +22,14 @@ another.
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from .backend import backend_names, get_backend, resolve_backend
 from .plan import (
@@ -45,6 +47,29 @@ from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor
 PLAN_FORMAT_VERSION = 1
 
 
+def mesh_spec(mesh: Mesh | None) -> dict | None:
+    """JSON-serializable description of a mesh: axis names + per-axis sizes.
+    Device identities are deliberately NOT serialized — a plan tuned on one
+    box re-materializes its mesh from the local devices on another."""
+    if mesh is None:
+        return None
+    return {"axis_names": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names]}
+
+
+def mesh_from_spec(spec: dict | None) -> Mesh | None:
+    """Rebuild a mesh from :func:`mesh_spec` output against the LOCAL
+    devices.  Returns None when the spec is None or the local process has
+    too few devices — the plan then loads fine for inspection but
+    ``execute`` raises until a real mesh is available."""
+    if spec is None:
+        return None
+    shape = tuple(int(s) for s in spec["shape"])
+    if math.prod(shape) > len(jax.devices()):
+        return None
+    return jax.make_mesh(shape, tuple(spec["axis_names"]))
+
+
 @dataclass(frozen=True)
 class TuckerConfig:
     """Frozen description of a Tucker decomposition job (the *what*).
@@ -57,9 +82,17 @@ class TuckerConfig:
     default ``None`` keeps the input dtype.
 
     ``impl`` names an ops backend from :mod:`repro.core.backend` (``matfree``
-    | ``explicit`` | ``pallas`` | any custom-registered name) or ``"auto"``
-    to let ``plan()`` pick the best backend for the current platform and
-    compute dtype; the resolved choice is frozen into the plan's schedule.
+    | ``explicit`` | ``pallas`` | ``sharded`` | any custom-registered name)
+    or ``"auto"`` to let ``plan()`` pick the best backend for the current
+    platform and compute dtype; the resolved choice is frozen into the
+    plan's schedule.
+
+    ``mesh`` attaches a ``jax.sharding.Mesh`` for multi-device execution:
+    ``impl="sharded"`` requires one, and ``impl="auto"`` resolves to the
+    sharded backend whenever one is present.  ``shard_axis`` names the mesh
+    axis the tensor is sharded over (default: the mesh's first axis).  The
+    mesh serializes as its SPEC (axis names + sizes, see :func:`mesh_spec`)
+    — device handles never enter plan JSON.
     """
     ranks: tuple[int, ...]
     variant: str = "sthosvd"
@@ -69,6 +102,8 @@ class TuckerConfig:
     als_iters: int = DEFAULT_ALS_ITERS
     hooi_iters: int = 3
     compute_dtype: str | None = None
+    mesh: Mesh | None = None
+    shard_axis: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "ranks", tuple(int(r) for r in self.ranks))
@@ -81,9 +116,35 @@ class TuckerConfig:
             raise ValueError(f"unknown variant {self.variant!r}; "
                              f"expected one of {VARIANTS}")
         if self.impl != "auto":
-            get_backend(self.impl)   # ValueError on unregistered names
+            b = get_backend(self.impl)   # ValueError on unregistered names
+            # a mesh on a single-device backend would be silently ignored —
+            # the OOM-regime user who attached it deserves a loud error
+            if self.mesh is not None and not b.requires_mesh:
+                raise ValueError(
+                    f"config carries a mesh but impl={self.impl!r} executes "
+                    "on a single device; pass impl='sharded' (or 'auto', "
+                    "which resolves to it when a mesh is present) or drop "
+                    "the mesh")
         if self.als_iters < 1 or self.hooi_iters < 0:
             raise ValueError("als_iters must be ≥1 and hooi_iters ≥0")
+        if self.shard_axis is not None and self.mesh is not None and \
+                self.shard_axis not in self.mesh.axis_names:
+            raise ValueError(f"shard_axis {self.shard_axis!r} not in mesh "
+                             f"axes {self.mesh.axis_names}")
+
+    @property
+    def resolved_shard_axis(self) -> str | None:
+        """The mesh axis sharded executions split over (explicit
+        ``shard_axis`` or the mesh's first axis); None without a mesh."""
+        if self.mesh is None:
+            return self.shard_axis
+        return self.shard_axis or self.mesh.axis_names[0]
+
+    @property
+    def n_shards(self) -> int:
+        """Device count along the shard axis (1 without a mesh)."""
+        return int(self.mesh.shape[self.resolved_shard_axis]) \
+            if self.mesh is not None else 1
 
     def to_dict(self) -> dict:
         return {"ranks": list(self.ranks), "variant": self.variant,
@@ -94,7 +155,9 @@ class TuckerConfig:
                                else self.mode_order),
                 "impl": self.impl, "als_iters": self.als_iters,
                 "hooi_iters": self.hooi_iters,
-                "compute_dtype": self.compute_dtype}
+                "compute_dtype": self.compute_dtype,
+                "mesh": mesh_spec(self.mesh),
+                "shard_axis": self.shard_axis}
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuckerConfig":
@@ -107,7 +170,9 @@ class TuckerConfig:
                    impl=d.get("impl", "matfree"),
                    als_iters=d.get("als_iters", DEFAULT_ALS_ITERS),
                    hooi_iters=d.get("hooi_iters", 3),
-                   compute_dtype=d.get("compute_dtype"))
+                   compute_dtype=d.get("compute_dtype"),
+                   mesh=mesh_from_spec(d.get("mesh")),
+                   shard_axis=d.get("shard_axis"))
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +196,28 @@ def _make_sweep(p: "TuckerPlan", batched: bool) -> Callable:
     cfg = p.config
     n_init = len(p.shape)  # HOOI: first full sweep is the st-HOSVD init
     cdtype = jnp.dtype(cfg.compute_dtype) if cfg.compute_dtype else None
+
+    if p.backend == "sharded":
+        from .distributed import sweep_sharded
+        if cfg.mesh is None:
+            raise RuntimeError(
+                "plan requires a mesh to execute its sharded schedule (the "
+                "loading process has too few devices to rebuild the plan's "
+                "mesh spec, or the config lost its mesh); re-plan with "
+                "TuckerConfig(mesh=...) on a large enough host")
+        if batched:
+            raise RuntimeError("sharded sweeps do not vmap; execute_batch "
+                               "runs sharded plans item by item")
+        mesh, axis = cfg.mesh, cfg.resolved_shard_axis
+
+        def sweep(x):
+            CACHE_STATS["traces"] += 1
+            if cdtype is not None:
+                x = x.astype(cdtype)
+            return sweep_sharded(x, steps, mesh=mesh, axis=axis,
+                                 als_iters=cfg.als_iters)
+
+        return jax.jit(sweep)
 
     def sweep(x):
         CACHE_STATS["traces"] += 1
@@ -190,12 +277,15 @@ class TuckerPlan:
 
     def _cache_key(self, batched: bool) -> tuple:
         # keyed on the RESOLVED per-step backend, not config.impl: two plans
-        # whose "auto" resolved identically share one compiled sweep
+        # whose "auto" resolved identically share one compiled sweep; sharded
+        # plans additionally key on the mesh + frozen shard modes (a program
+        # compiled for one device set never serves another)
         return (self.shape, self.dtype,
-                tuple((s.mode, s.method, s.r_n, s.backend)
+                tuple((s.mode, s.method, s.r_n, s.backend, s.shard_mode)
                       for s in self.schedule),
                 self.config.variant, self.config.als_iters,
-                self.config.compute_dtype, batched)
+                self.config.compute_dtype, batched,
+                self.config.mesh, self.config.resolved_shard_axis)
 
     def _sweep(self, batched: bool) -> Callable:
         key = self._cache_key(batched)
@@ -207,6 +297,19 @@ class TuckerPlan:
             CACHE_STATS["hits"] += 1
         return fn
 
+    def _place_input(self, x: jax.Array) -> jax.Array:
+        """Sharded plans: land the input on the mesh pre-sharded the way the
+        first step expects, so the compiled sweep starts from the frozen
+        layout instead of paying a replicate-then-reshard."""
+        if self.backend != "sharded" or self.config.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+
+        from .distributed import _spec_for
+        spec = _spec_for(len(self.shape), self.schedule[0].shard_mode,
+                         self.config.resolved_shard_axis)
+        return jax.device_put(x, NamedSharding(self.config.mesh, spec))
+
     # -- execution -----------------------------------------------------------
     def execute(self, x: jax.Array) -> SthosvdResult:
         """Run the frozen schedule on ``x`` as one compiled program."""
@@ -215,7 +318,7 @@ class TuckerPlan:
             raise ValueError(f"plan is for shape {self.shape}, got {x.shape}")
         if str(x.dtype) != self.dtype:
             raise ValueError(f"plan is for dtype {self.dtype}, got {x.dtype}")
-        core, factors = self._sweep(batched=False)(x)
+        core, factors = self._sweep(batched=False)(self._place_input(x))
         return SthosvdResult(
             tucker=TuckerTensor(core=core, factors=list(factors)),
             trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
@@ -225,13 +328,19 @@ class TuckerPlan:
 
     def execute_batch(self, xs: jax.Array) -> list[SthosvdResult]:
         """Decompose a fleet of same-shaped tensors (leading batch axis) with
-        one vmapped program; returns one result per batch element."""
+        one vmapped program; returns one result per batch element.
+
+        Sharded plans run the fleet item by item instead (shard_map
+        schedules don't vmap) — each item still reuses the one cached
+        compiled sweep, so the fleet pays a single compilation."""
         xs = jnp.asarray(xs)
         if tuple(xs.shape[1:]) != self.shape:
             raise ValueError(
                 f"plan is for batches of shape {self.shape}, got {xs.shape}")
         if str(xs.dtype) != self.dtype:
             raise ValueError(f"plan is for dtype {self.dtype}, got {xs.dtype}")
+        if self.backend == "sharded":
+            return [self.execute(xs[b]) for b in range(xs.shape[0])]
         cores, factors = self._sweep(batched=True)(xs)
         out = []
         for b in range(xs.shape[0]):
@@ -290,14 +399,21 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
 
     All selector/cost-model queries happen here, against the statically known
     per-mode problem sizes, and ``config.impl`` (possibly ``"auto"``) is
-    resolved through the backend registry against the current platform and
-    compute dtype; ``TuckerPlan.execute`` never selects or resolves again.
+    resolved through the backend registry against the current platform,
+    compute dtype, and mesh; ``TuckerPlan.execute`` never selects or
+    resolves again.  With a mesh (``impl="sharded"``, or ``"auto"`` when
+    one is attached) the shard-mode schedule is frozen here too: per-step
+    shard choice, reshard points, and per-device ``peak_bytes``.
     """
     shape = tuple(int(s) for s in shape)
     dtype = jnp.dtype(dtype)
     compute_dtype = jnp.dtype(config.compute_dtype) if config.compute_dtype \
         else dtype
-    backend = resolve_backend(config.impl, dtype=compute_dtype)
+    backend = resolve_backend(config.impl, dtype=compute_dtype,
+                              mesh=config.mesh)
+    if backend.requires_mesh and config.variant != "sthosvd":
+        raise ValueError(f"backend {backend.name!r} supports variant "
+                         f"'sthosvd' only, got {config.variant!r}")
     timed = None
     if config.methods == "auto":
         if selector is None:
@@ -308,7 +424,8 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
         shape, config.ranks, variant=config.variant, methods=config.methods,
         mode_order=config.mode_order, selector=selector,
         als_iters=config.als_iters, hooi_iters=config.hooi_iters,
-        itemsize=compute_dtype.itemsize, backend=backend.name)
+        itemsize=compute_dtype.itemsize, backend=backend.name,
+        n_shards=config.n_shards if backend.requires_mesh else 1)
     return TuckerPlan(shape=shape, dtype=str(dtype), config=config,
                       schedule=schedule,
                       select_seconds=timed.seconds if timed else 0.0)

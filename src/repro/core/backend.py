@@ -18,12 +18,18 @@ Built-in backends:
                 matmul / batched-TTM / TTT with zero-padding shims for
                 non-tile-multiple shapes; interpret-mode fallback off-TPU
                 so the same code path runs (slowly) everywhere.
+  ``sharded``   multi-device st-HOSVD over a jax mesh (core/distributed.py):
+                TuckerMPI-style partial-Gram + psum and local TTM under
+                shard_map, resharding to the largest remaining mode between
+                steps.  Requires a mesh (``TuckerConfig(mesh=...)``); the
+                local per-device primitives are ``matfree``'s, so this
+                backend never matricizes either.
 
 ``resolve_backend("auto", ...)`` picks the best available backend for the
-current platform at *plan* time (TPU → ``pallas``, otherwise ``matfree``),
-honouring each backend's dtype/platform capabilities.  Custom backends
-(e.g. a future ``sharded`` mesh backend) register via
-:func:`register_backend` and are immediately usable as ``impl=`` values.
+current platform at *plan* time (a mesh → ``sharded``, TPU → ``pallas``,
+otherwise ``matfree``), honouring each backend's dtype/platform
+capabilities.  Custom backends register via :func:`register_backend` and
+are immediately usable as ``impl=`` values.
 """
 
 from __future__ import annotations
@@ -68,6 +74,10 @@ class OpsBackend:
     cost_scale
         Relative per-FLOP cost hint vs ``matfree`` on this backend's native
         platform; the selector/cost model may scale Eq. 4/5 estimates by it.
+    requires_mesh
+        True if the backend executes across a jax mesh: plans must carry one
+        (``TuckerConfig(mesh=...)``), ``auto`` only selects it when a mesh is
+        supplied, and per-step ``peak_bytes`` become per-device figures.
     """
     name: str
     loader: Callable[[], OpsTriple]
@@ -77,6 +87,7 @@ class OpsBackend:
     tile_align: int | None = None
     cost_scale: float = 1.0
     interpret_fallback: bool = False
+    requires_mesh: bool = False
     _ops: list = field(default_factory=list, repr=False, compare=False)
 
     def ops(self) -> OpsTriple:
@@ -133,14 +144,16 @@ AUTO_ORDER: dict[str, tuple[str, ...]] = {
 
 
 def resolve_backend(impl: str, *, platform: str | None = None,
-                    dtype=None) -> OpsBackend:
+                    dtype=None, mesh=None) -> OpsBackend:
     """Resolve an ``impl`` name (or ``"auto"``) to a concrete backend.
 
     Explicit names are honoured even off their native platform when the
     backend has an interpreter/emulation path (``pallas`` off-TPU runs in
     Pallas interpret mode) — asking for a backend by name means you want
     *that* code path.  ``"auto"`` only ever picks natively-supported
-    backends, falling back to ``matfree``.
+    backends, falling back to ``matfree``; when ``mesh`` (a
+    ``jax.sharding.Mesh``) is supplied, ``auto`` routes to the ``sharded``
+    mesh backend so plans built with a mesh execute distributed by default.
     """
     platform = platform or jax.default_backend()
     if impl != "auto":
@@ -148,10 +161,18 @@ def resolve_backend(impl: str, *, platform: str | None = None,
         if dtype is not None and not b.supports_dtype(dtype):
             raise ValueError(f"backend {b.name!r} does not support dtype "
                              f"{jnp.dtype(dtype)} (supported: {b.dtypes})")
+        if b.requires_mesh and mesh is None:
+            raise ValueError(f"backend {b.name!r} requires a mesh; pass "
+                             "TuckerConfig(mesh=...) or call "
+                             "sthosvd_distributed directly")
         if not b.native_on(platform) and not b.interpret_fallback:
             raise ValueError(f"backend {b.name!r} runs on {b.platforms}, not "
                              f"{platform!r}, and has no interpreter fallback")
         return b
+    if mesh is not None and "sharded" in _REGISTRY:
+        b = _REGISTRY["sharded"]
+        if dtype is None or b.supports_dtype(dtype):
+            return b
     for name in AUTO_ORDER.get(platform, ("matfree",)):
         b = _REGISTRY.get(name)
         if b is not None and b.native_on(platform) and \
@@ -214,6 +235,14 @@ register_backend(OpsBackend(
     # kernels/ops.py defaults interpret=True off-TPU, so explicit
     # `impl="pallas"` works — slowly — on any platform
     interpret_fallback=True))
+
+register_backend(OpsBackend(
+    # the shard_map schedule runs matfree's primitives per device; mesh
+    # plumbing (partial-Gram psum, local TTM, resharding) lives in
+    # core/distributed.py and is wired in by the plan layer
+    name="sharded", loader=_load_matfree,
+    dtypes=("*",), platforms=("*",), matricizes=False,
+    requires_mesh=True, cost_scale=1.0))
 
 
 def backend_ops(impl: str) -> OpsTriple:

@@ -1,5 +1,5 @@
 """Distributed st-HOSVD for tensors sharded across a mesh (TuckerMPI pattern,
-JAX-native).
+JAX-native) — the execution engine behind the ``sharded`` ops backend.
 
 Decomposition of a tensor sharded along one mode over a mesh axis:
 
@@ -13,12 +13,26 @@ Decomposition of a tensor sharded along one mode over a mesh axis:
   * Before processing the currently-sharded mode the tensor is resharded to
     the largest *remaining* mode (one all-to-all, amortized by the shrink).
 
-The ALS path runs under GSPMD (jit + shardings) — its inner TTM/TTT chain
-contracts sharded dims, and XLA inserts the same psum pattern automatically;
-we keep it as the reference for the manual schedule.
+The ALS path runs under GSPMD (sharding constraints inside jit) — its inner
+TTM/TTT chain contracts sharded dims, and XLA inserts the same psum pattern
+automatically; we keep it as the reference for the manual schedule.
+
+The distribution *decisions* (which mode to shard per step, where the
+reshards land) are frozen at plan time by
+:func:`repro.core.plan.resolve_schedule` via :func:`pick_shard_mode`; this
+module only executes frozen :class:`~repro.core.plan.ModeStep` schedules:
+
+  * :func:`run_sharded_schedule` — eager per-step runner with real per-mode
+    wall-clock (the legacy :func:`sthosvd_distributed` entry point).
+  * :func:`sweep_sharded` — the same schedule as one pure function, compiled
+    whole by ``TuckerPlan``'s process-wide sweep cache (zero recompiles on
+    plan reuse, exactly like the single-device backends).
 """
 
 from __future__ import annotations
+
+import time
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +40,14 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from . import tensor_ops as T
-from .solvers import DEFAULT_ALS_ITERS
-from .sthosvd import SthosvdResult, ModeTrace, TuckerTensor
+from .plan import ModeStep, solve_step
+from .solvers import DEFAULT_ALS_ITERS, als_solve
+from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor
+
+try:  # jax.core.Tracer is deprecated on newer jax; _src.core keeps it
+    from jax.core import Tracer as _Tracer
+except (ImportError, AttributeError):  # pragma: no cover - jax-version dependent
+    from jax._src.core import Tracer as _Tracer
 
 
 def _spec_for(ndim: int, mode: int | None, axis: str) -> P:
@@ -37,12 +57,20 @@ def _spec_for(ndim: int, mode: int | None, axis: str) -> P:
     return P(*parts)
 
 
-def _shard(x: jax.Array, mesh: Mesh, mode: int | None, axis: str) -> jax.Array:
-    return jax.device_put(x, NamedSharding(mesh, _spec_for(x.ndim, mode, axis)))
+def _reshard(x: jax.Array, mesh: Mesh, mode: int | None, axis: str) -> jax.Array:
+    """Move ``x`` onto the mesh, sharded on ``mode`` (None = replicated).
+    Inside a jit trace this lowers to a sharding constraint (GSPMD inserts
+    the all-to-all); eagerly it is a device_put."""
+    sh = NamedSharding(mesh, _spec_for(x.ndim, mode, axis))
+    if isinstance(x, _Tracer):
+        return jax.lax.with_sharding_constraint(x, sh)
+    return jax.device_put(x, sh)
 
 
+@lru_cache(maxsize=256)
 def _gram_psum(mesh: Mesh, axis: str, ndim: int, mode: int, shard_mode: int):
-    """shard_map'd partial-Gram + psum over the shard axis."""
+    """shard_map'd partial-Gram + psum over the shard axis (cached per
+    (mesh, schedule-position) so eager reuse never rebuilds the jit)."""
     @jax.jit
     def run(x):
         def body(xl):
@@ -56,6 +84,7 @@ def _gram_psum(mesh: Mesh, axis: str, ndim: int, mode: int, shard_mode: int):
     return run
 
 
+@lru_cache(maxsize=256)
 def _ttm_local(mesh: Mesh, axis: str, ndim: int, mode: int, shard_mode: int):
     """shard_map'd local TTM (contraction mode fully local)."""
     @jax.jit
@@ -81,6 +110,78 @@ def pick_shard_mode(shape: tuple[int, ...], exclude: int, n_shards: int) -> int 
     return None
 
 
+# ---------------------------------------------------------------------------
+# Frozen-schedule execution (shared by the plan layer and the legacy entry)
+# ---------------------------------------------------------------------------
+
+def solve_step_sharded(y: jax.Array, step: ModeStep, mesh: Mesh, axis: str,
+                       *, als_iters: int = DEFAULT_ALS_ITERS):
+    """One frozen mode solve on the mesh: reshard to the step's recorded
+    shard mode, then run its solver's collective schedule.  Returns
+    ``(u, y_new)`` with ``y_new`` sharded on ``step.shard_mode``.
+
+    Works both eagerly (``run_sharded_schedule``) and under an enclosing jit
+    trace (``sweep_sharded``): resharding becomes a device_put or a GSPMD
+    constraint accordingly.
+    """
+    n = y.ndim
+    y = _reshard(y, mesh, step.shard_mode, axis)
+    if step.shard_mode is None:
+        # replicated fallback: every device runs the plain local solve
+        # (matfree primitives — same contract as the single-device path)
+        res = solve_step(y, step, als_iters=als_iters, impl="matfree")
+        return res.u, res.y_new
+    if step.method == "eig":
+        s = _gram_psum(mesh, axis, n, step.mode, step.shard_mode)(y)
+        _, vecs = jnp.linalg.eigh(
+            s.astype(jnp.promote_types(s.dtype, jnp.float32)))
+        u = vecs[:, -step.r_n:][:, ::-1].astype(y.dtype)
+        y = _ttm_local(mesh, axis, n, step.mode, step.shard_mode)(y, u.T)
+        return u, y
+    if step.method == "als":
+        # GSPMD path: y carries the shard constraint, XLA inserts the psums
+        u, y_new = als_solve(y, step.mode, step.r_n, num_iters=als_iters)
+        return u, _reshard(y_new, mesh, step.shard_mode, axis)
+    raise ValueError(f"unknown distributed method {step.method!r}")
+
+
+def run_sharded_schedule(x: jax.Array, steps, mesh: Mesh, axis: str, *,
+                         als_iters: int = DEFAULT_ALS_ITERS,
+                         block_until_ready: bool = True):
+    """Eager runner: per-step execution with real wall-clock per mode.
+
+    Returns ``(y, factors, seconds)`` like
+    :func:`repro.core.plan.run_schedule` (``factors`` keyed by mode).
+    """
+    y = x
+    factors: dict[int, jax.Array] = {}
+    seconds: list[float] = []
+    for step in steps:
+        t0 = time.perf_counter()
+        u, y = solve_step_sharded(y, step, mesh, axis, als_iters=als_iters)
+        if block_until_ready:
+            jax.block_until_ready(y)
+        seconds.append(time.perf_counter() - t0)
+        factors[step.mode] = u
+    return y, factors, seconds
+
+
+def sweep_sharded(x, steps, *, mesh: Mesh, axis: str, als_iters: int):
+    """The whole sharded sweep as one pure function, jit-compiled by
+    ``TuckerPlan`` — inner shard_maps and sharding constraints inline into a
+    single XLA program with the reshard collectives at the frozen points."""
+    y = x
+    factors: dict[int, jax.Array] = {}
+    for step in steps:
+        u, y = solve_step_sharded(y, step, mesh, axis, als_iters=als_iters)
+        factors[step.mode] = u
+    return y, [factors[m] for m in range(x.ndim)]
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry point — thin wrapper over the shared schedule machinery
+# ---------------------------------------------------------------------------
+
 def sthosvd_distributed(
     x: jax.Array,
     ranks,
@@ -89,62 +190,38 @@ def sthosvd_distributed(
     axis: str = "data",
     methods: str = "eig",
     als_iters: int = DEFAULT_ALS_ITERS,
+    selector=None,
+    block_until_ready: bool = True,
 ) -> SthosvdResult:
     """Distributed flexible st-HOSVD.  ``methods``: 'eig' | 'als' | 'auto'.
 
-    'eig' runs the explicit shard_map schedule above.  'als'/'auto' route the
-    per-mode solve through GSPMD-sharded jit (collectives inserted by XLA);
-    'auto' consults the adaptive selector per mode exactly as the
-    single-device path does.
+    Thin wrapper over the shared plan machinery: the per-mode solver AND
+    shard-mode schedule is resolved ahead of time
+    (:func:`repro.core.plan.resolve_schedule` with ``backend="sharded"``),
+    then run eagerly with real per-mode wall-clock in the trace — exactly
+    how :func:`repro.core.sthosvd.sthosvd` wraps the single-device runner.
+    For amortized/batched execution build a plan instead:
+    ``plan(shape, dtype, TuckerConfig(..., impl="sharded", mesh=mesh))``.
     """
-    from .solvers import als_solve
-    from .selector import default_selector
+    from .plan import TimedSelector, resolve_schedule
 
-    n = x.ndim
-    ranks = tuple(int(r) for r in ranks)
-    n_shards = mesh.shape[axis]
-    selector = default_selector() if methods == "auto" else None
+    timed = None
+    if methods == "auto":
+        if selector is None:
+            from .selector import default_selector
+            selector = default_selector()
+        selector = timed = TimedSelector(selector)
+    schedule = resolve_schedule(
+        x.shape, ranks, variant="sthosvd", methods=methods, selector=selector,
+        als_iters=als_iters, itemsize=x.dtype.itemsize, backend="sharded",
+        n_shards=mesh.shape[axis])
 
-    y = x
-    factors: list[jax.Array | None] = [None] * n
-    trace: list[ModeTrace] = []
-
-    for mode in range(n):
-        i_n, r_n = y.shape[mode], ranks[mode]
-        j_n = y.size // i_n
-        shard_mode = pick_shard_mode(y.shape, mode, n_shards)
-        y = _shard(y, mesh, shard_mode, axis)
-
-        if methods == "auto":
-            method = selector(i_n=i_n, r_n=r_n, j_n=j_n)
-        else:
-            method = methods
-
-        if shard_mode is None:
-            # replicated fallback: tensor already shrunk below shardability
-            from .solvers import SOLVERS
-            if method == "als":
-                res = SOLVERS["als"](y, mode, r_n, num_iters=als_iters)
-            else:
-                res = SOLVERS["eig"](y, mode, r_n)
-            u, y = res.u, res.y_new
-        elif method == "eig":
-            s = _gram_psum(mesh, axis, n, mode, shard_mode)(y)
-            _, vecs = jnp.linalg.eigh(s)
-            u = vecs[:, -r_n:][:, ::-1].astype(y.dtype)
-            y = _ttm_local(mesh, axis, n, mode, shard_mode)(y, u.T)
-        elif method == "als":
-            in_sh = NamedSharding(mesh, _spec_for(n, shard_mode, axis))
-            out_sh = (NamedSharding(mesh, P()),
-                      NamedSharding(mesh, _spec_for(n, shard_mode, axis)))
-            solve = jax.jit(
-                lambda yy: tuple(als_solve(yy, mode, r_n, num_iters=als_iters)),
-                in_shardings=in_sh, out_shardings=out_sh)
-            u, y = solve(y)
-        else:
-            raise ValueError(f"unknown distributed method {method!r}")
-
-        factors[mode] = u
-        trace.append(ModeTrace(mode, method, i_n, r_n, j_n, 0.0))
-
-    return SthosvdResult(TuckerTensor(core=y, factors=factors), trace=trace)
+    y, factors, seconds = run_sharded_schedule(
+        x, schedule, mesh, axis, als_iters=als_iters,
+        block_until_ready=block_until_ready)
+    trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
+                       backend=s.backend)
+             for s, dt in zip(schedule, seconds)]
+    tucker = TuckerTensor(core=y, factors=[factors[m] for m in range(x.ndim)])
+    return SthosvdResult(tucker=tucker, trace=trace,
+                         select_overhead_s=timed.seconds if timed else 0.0)

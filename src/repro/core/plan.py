@@ -38,27 +38,42 @@ VARIANTS = ("sthosvd", "thosvd", "hooi")
 @dataclass(frozen=True)
 class ModeStep:
     """One frozen mode solve: which solver runs on which (sub)problem,
-    through which ops backend."""
+    through which ops backend.
+
+    For sharded schedules (``backend="sharded"``) two extra fields freeze
+    the distribution decision: ``shard_mode`` is the tensor mode the input
+    is sharded on while this step runs (``None`` = fully replicated — the
+    shrunk tensor no longer divides over the mesh), and ``n_shards`` is the
+    device count the step's slab is split across (1 when replicated).
+    ``peak_bytes`` is then a PER-DEVICE figure: the sharded I/O slabs divide
+    by ``n_shards`` while replicated solver scratch does not.
+    """
     mode: int
     method: str          # "eig" | "als" | "svd"
     i_n: int             # mode dimension at solve time
     r_n: int             # truncation rank
     j_n: int             # product of the remaining dims at solve time
     flops: float         # modeled solver cost (cost_model Eq. 4/5)
-    peak_bytes: int      # modeled peak working set of this step
+    peak_bytes: int      # modeled peak working set (per device if sharded)
     backend: str = "matfree"   # resolved ops backend (never "auto")
+    shard_mode: int | None = None  # mode sharded over the mesh (None = replicated)
+    n_shards: int = 1    # devices this step's tensor is split across
 
     def to_dict(self) -> dict:
         return {"mode": self.mode, "method": self.method, "i_n": self.i_n,
                 "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
-                "peak_bytes": self.peak_bytes, "backend": self.backend}
+                "peak_bytes": self.peak_bytes, "backend": self.backend,
+                "shard_mode": self.shard_mode, "n_shards": self.n_shards}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModeStep":
+        shard_mode = d.get("shard_mode")
         return cls(mode=int(d["mode"]), method=str(d["method"]),
                    i_n=int(d["i_n"]), r_n=int(d["r_n"]), j_n=int(d["j_n"]),
                    flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]),
-                   backend=str(d.get("backend", "matfree")))
+                   backend=str(d.get("backend", "matfree")),
+                   shard_mode=None if shard_mode is None else int(shard_mode),
+                   n_shards=int(d.get("n_shards", 1)))
 
 
 class TimedSelector:
@@ -130,7 +145,7 @@ def _step_cost(method: str, i_n: int, r_n: int, j_n: int,
 
 
 def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
-                     itemsize: int) -> int:
+                     itemsize: int, n_shards: int = 1) -> int:
     """Modeled peak working set: input + output tensors plus solver scratch
     (EIG: the I_n×I_n Gram; ALS: L/R iterates; SVD: the explicit unfolding
     plus its left singular block).
@@ -139,30 +154,43 @@ def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
     lives in the *accumulation* dtype — sub-fp32 inputs (bf16/fp16) are
     solved in fp32 (see solvers.py ``cdtype``), so their scratch is 4-byte,
     and ALS additionally materializes an fp32 cast of the whole input.
+
+    With ``n_shards > 1`` the figure is PER DEVICE: the I/O slabs (and ALS's
+    cast/R-tensor, which stay sharded with the input) divide by the shard
+    count, while replicated scratch (EIG's psum'd Gram, ALS's L factor and
+    R^T R) does not — the paper's GPU OOM regime is exactly where this
+    distinction decides whether a mode fits.
     """
     accum = max(itemsize, 4)   # bf16/fp16 accumulate in fp32; fp64 stays 8
-    io = (i_n * j_n + r_n * j_n) * itemsize
+    io = (i_n * j_n + r_n * j_n) * itemsize // n_shards
     if method == "eig":
-        scratch = i_n * i_n * accum
+        scratch = i_n * i_n * accum            # replicated psum'd Gram
     elif method == "als":
-        scratch = (2 * (i_n * r_n + r_n * j_n) + 2 * r_n * r_n) * accum
+        scratch = (2 * i_n * r_n + 2 * r_n * r_n) * accum \
+            + 2 * r_n * j_n * accum // n_shards   # R-tensor stays sharded
         if accum != itemsize:
-            scratch += i_n * j_n * accum   # yc: fp32 cast of the input
-    else:  # svd materializes the unfolding and U in the compute dtype
+            scratch += i_n * j_n * accum // n_shards  # yc: fp32 input cast
+    else:  # svd materializes the unfolding and U, replicated by design
         scratch = (i_n * j_n + i_n * min(i_n, j_n)) * accum
     return int(io + scratch)
 
 
 def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
-               als_iters: int, itemsize: int, backend: str) -> ModeStep:
+               als_iters: int, itemsize: int, backend: str,
+               n_shards: int = 1, shard_mode: int | None = None) -> ModeStep:
     m = selector(i_n=i_n, r_n=r_n, j_n=j_n) if method is None else method
     if m not in SOLVERS:
         raise ValueError(f"unknown solver {m!r}")
+    if m == "svd":
+        shard_mode = None   # SVD matricizes; sharded schedules run it replicated
+    eff_shards = n_shards if shard_mode is not None else 1
     scale = get_backend(backend).cost_scale
     return ModeStep(mode=mode, method=m, i_n=i_n, r_n=r_n, j_n=j_n,
                     flops=scale * _step_cost(m, i_n, r_n, j_n, als_iters),
-                    peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize),
-                    backend=backend)
+                    peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize,
+                                                eff_shards),
+                    backend=backend, shard_mode=shard_mode,
+                    n_shards=eff_shards)
 
 
 def resolve_schedule(
@@ -178,6 +206,7 @@ def resolve_schedule(
     include_init: bool = True,
     itemsize: int = 4,
     backend: str = "matfree",
+    n_shards: int = 1,
 ) -> tuple[ModeStep, ...]:
     """Resolve the full per-mode solver schedule ahead of execution.
 
@@ -189,10 +218,22 @@ def resolve_schedule(
     ``itemsize`` is the byte width of the *compute* dtype (callers derive it
     from ``TuckerConfig.compute_dtype`` or the input dtype — never assume 4)
     and ``backend`` the resolved ops-backend name stamped on every step.
+
+    ``n_shards > 1`` resolves the DISTRIBUTION schedule too (sharded/mesh
+    backend, st-HOSVD only): each step freezes the shard mode the tensor
+    lives on while that mode is solved — the largest remaining mode (other
+    than the one being solved) that divides by the shard count, via
+    :func:`repro.core.distributed.pick_shard_mode` — so reshard points are
+    known ahead of execution and ``peak_bytes`` become per-device figures.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
     get_backend(backend)   # concrete, registered backend only (never "auto")
+    if n_shards > 1 and variant != "sthosvd":
+        raise ValueError(f"sharded schedules support variant 'sthosvd' only, "
+                         f"got {variant!r} (t-HOSVD/HOOI re-solve from the "
+                         "full tensor; reshard scheduling assumes the "
+                         "sequential shrink)")
     shape = tuple(int(s) for s in shape)
     ranks = validate_ranks(shape, ranks)
     n = len(shape)
@@ -220,13 +261,17 @@ def resolve_schedule(
 
     # st-HOSVD sweep (also HOOI's init): the tensor shrinks between steps
     if variant == "sthosvd" or include_init:
+        if n_shards > 1:
+            from .distributed import pick_shard_mode
         cur = list(shape)
         for mode in resolve_mode_order(shape, ranks, mode_order):
             i_n, r_n = cur[mode], ranks[mode]
             j_n = math.prod(cur) // i_n
+            shard = pick_shard_mode(tuple(cur), mode, n_shards) \
+                if n_shards > 1 else None
             steps.append(_make_step(mode, method_for(mode), selector,
                                     i_n, r_n, j_n, als_iters, itemsize,
-                                    backend))
+                                    backend, n_shards, shard))
             cur[mode] = r_n
     if variant == "sthosvd":
         return tuple(steps)

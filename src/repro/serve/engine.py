@@ -137,18 +137,40 @@ class TuckerBatchEngine:
     default ``None`` honours per-request configs (typically ``"auto"``,
     resolved per platform at plan time).  ``stats["backends"]`` counts
     requests per resolved backend.
+
+    ``mesh`` (plus optional ``shard_axis``) attaches a device mesh to every
+    plan the engine builds, so grouped requests execute through the
+    ``sharded`` backend — a mesh with no explicit ``impl`` pins
+    ``impl="sharded"``.  Requests that already carry their own mesh keep
+    it.  A mesh is only ever attached to (or kept on) configs whose
+    resolved backend can use one (``"auto"`` or a mesh-requiring backend);
+    pinning a single-device ``impl`` drops it, since ``TuckerConfig``
+    rejects the contradictory combination.  Sharded groups still batch
+    planning and compilation — ``execute_batch`` runs them item by item
+    over one cached compiled sweep.
     """
 
-    def __init__(self, selector=None, *, impl: str | None = None):
+    def __init__(self, selector=None, *, impl: str | None = None,
+                 mesh=None, shard_axis: str | None = None):
         self._selector = selector
-        self._impl = impl
+        self._impl = "sharded" if impl is None and mesh is not None else impl
+        self._mesh = mesh
+        self._shard_axis = shard_axis
         self._plans: dict[tuple, TuckerPlan] = {}
         self.stats = {"plans_built": 0, "requests": 0, "batches": 0,
                       "backends": {}}
 
     def _pinned(self, config: TuckerConfig) -> TuckerConfig:
-        if self._impl is not None and config.impl != self._impl:
-            config = replace(config, impl=self._impl)
+        from ..core.backend import get_backend
+
+        impl = self._impl if self._impl is not None else config.impl
+        mesh, axis = config.mesh, config.shard_axis
+        if mesh is None and self._mesh is not None:
+            mesh, axis = self._mesh, self._shard_axis or config.shard_axis
+        if impl != "auto" and not get_backend(impl).requires_mesh:
+            mesh = None   # pinned single-device backend: a mesh is moot
+        if (impl, mesh, axis) != (config.impl, config.mesh, config.shard_axis):
+            config = replace(config, impl=impl, mesh=mesh, shard_axis=axis)
         return config
 
     def plan_for(self, shape, dtype, config: TuckerConfig) -> TuckerPlan:
