@@ -15,10 +15,13 @@ def main() -> None:
 
     from . import backend_bench as bb
     from . import paper_figs as pf
+    from . import selector_bench as selb
     from . import system_bench as sb
 
     benches = {
         "backend": lambda: bb.bench_backends(full=args.full),
+        "selector_sweep": lambda: (selb.bench_sweeps(full=args.full),
+                                   selb.bench_selection_overhead()),
         "fig2": lambda: pf.fig2_solver_variants(full=args.full),
         "table3": lambda: pf.table3_realworld(full=args.full),
         "fig5": lambda: pf.fig5_adaptive_speedup(),

@@ -1,0 +1,114 @@
+"""Selector benchmark: adaptive vs coarse-grained sweeps + selection overhead.
+
+Reproduces the paper's two selector claims on this box (Figs. 7/9):
+
+  * the *sweep* rows time a full planned st-HOSVD with ``methods="auto"``
+    (the trained/analytic selector picks per mode) against the coarse
+    ``"eig"``-everywhere and ``"als"``-everywhere baselines — the adaptive
+    schedule should match or beat the better baseline per shape;
+  * the *select_overhead* rows time a single selector query (tree walk +
+    feature extraction vs the analytic cost model) — the paper reports
+    23–90 µs per mode, negligible against any mode solve.
+
+Writes ``BENCH_selector.json`` rows (folded into the step-summary table by
+``benchmarks.summary_md``).
+
+Usage:  python -m benchmarks.selector_bench [--full] [--out BENCH_selector.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core import TuckerConfig, plan
+from repro.core.selector import Selector, default_selector
+
+from .common import emit, lowrank_tensor, time_call
+
+# asymmetric shapes straddle the EIG/ALS crossover: one dominant mode
+# (EIG's Gram explodes) vs balanced small modes (EIG wins)
+CASES = {
+    False: [((96, 24, 16), (8, 6, 4)), ((16, 96, 24), (4, 8, 6)),
+            ((32, 32, 32), (8, 8, 8))],
+    True: [((512, 64, 48), (16, 12, 8)), ((48, 512, 64), (8, 16, 12)),
+           ((128, 128, 128), (16, 16, 16))],
+}
+
+#: per-query overhead probes: (i_n, r_n, j_n)
+QUERIES = [(96, 8, 384), (512, 16, 3072), (32, 8, 1024)]
+
+
+def bench_sweeps(full: bool, reps: int = 3) -> list[dict]:
+    sel = default_selector()
+    model = "tree" if sel.tree is not None else "cost_model"
+    rows: list[dict] = []
+    for dims, ranks in CASES[full]:
+        x = lowrank_tensor(dims, ranks, noise=0.05)
+        for methods in ("auto", "eig", "als"):
+            cfg = TuckerConfig(ranks=ranks, methods=methods)
+            p = plan(x.shape, x.dtype, cfg)
+            t = time_call(lambda: jax.block_until_ready(
+                p.execute(x).tucker.core), reps=reps)
+            err = float(p.execute(x).tucker.rel_error(x))
+            tag = "x".join(map(str, dims))
+            emit(f"selector/sweep/{methods}/{tag}", t,
+                 f"schedule={'+'.join(p.methods)} rel_err={err:.4f}")
+            rows.append({"bench": "sweep", "methods": methods,
+                         "selector": model if methods == "auto" else None,
+                         "shape": list(dims), "ranks": list(ranks),
+                         "us_per_call": t * 1e6, "rel_err": err,
+                         "schedule": "+".join(p.methods),
+                         "select_us": p.select_seconds * 1e6})
+    return rows
+
+
+def bench_selection_overhead(reps: int = 2000) -> list[dict]:
+    """Per-query selector cost: trained tree vs analytic cost model (paper
+    Fig. 7: 23–90 µs per mode)."""
+    trained = default_selector()
+    probes = [("cost_model", Selector(platform=trained.platform))]
+    if trained.tree is not None:
+        probes.insert(0, ("tree", trained))
+    rows = []
+    for name, sel in probes:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for i, r, j in QUERIES:
+                sel(i_n=i, r_n=r, j_n=j)
+        per_call = (time.perf_counter() - t0) / (reps * len(QUERIES))
+        emit(f"selector/query/{name}", per_call)
+        rows.append({"bench": "select_overhead", "selector": name,
+                     "us_per_call": per_call * 1e6})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger shapes")
+    ap.add_argument("--out", default="BENCH_selector.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = bench_sweeps(full=args.full) + bench_selection_overhead()
+    if args.out:
+        sel = default_selector()
+        doc = {"bench": "selector", "jax_backend": jax.default_backend(),
+               "host": _platform.machine(), "full": args.full,
+               "model": ("tree" if sel.tree is not None else "cost_model"),
+               "model_meta": {k: sel.meta[k] for k in
+                              ("test_accuracy", "cv_accuracy", "n_examples",
+                               "store_digest") if k in sel.meta},
+               "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,8 @@ from pathlib import Path
 
 #: columns shown first, in this order, when any row carries them; remaining
 #: keys are folded into a trailing ``notes`` column
-PREFERRED = ("source", "bench", "backend", "op", "methods", "n_devices",
-             "shape", "ranks", "us_per_call", "rel_err")
+PREFERRED = ("source", "bench", "backend", "op", "methods", "selector",
+             "n_devices", "shape", "ranks", "us_per_call", "rel_err")
 SKIP = {"mode", "r", "native"}   # low-signal noise in a cross-bench table
 
 

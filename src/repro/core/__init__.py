@@ -6,7 +6,9 @@ Public API:
   sthosvd / sthosvd_eig / sthosvd_als / sthosvd_svd — flexible st-HOSVD
       (legacy per-call wrappers over the same schedule runner)
   TuckerTensor — decomposition result (reconstruct, rel_error, ratio)
-  Selector / default_selector / train_and_save — adaptive solver selector
+  Selector / default_selector — adaptive solver selector, resolved per
+      (platform, backend); trained/calibrated by the repro.tune flywheel
+  CostModel — Eq. 4/5 constants (textbook default, hardware-calibratable)
   tensor_ops — matricization-free TTM/TTT/Gram (+ explicit baselines)
   OpsBackend / register_backend / get_backend / resolve_backend /
       backend_names — pluggable ops-backend registry (matfree | explicit |
@@ -35,6 +37,7 @@ from .backend import (
     register_backend,
     resolve_backend,
 )
+from .cost_model import DEFAULT_COST_MODEL, CostModel
 from .plan import ModeStep, resolve_schedule
 from .selector import Selector, default_selector, extract_features
 from .solvers import ALS, EIG, SVD, als_solve, eig_solve, svd_solve
@@ -48,8 +51,8 @@ from .sthosvd import (
 )
 
 __all__ = [
-    "ALS", "EIG", "SVD",
-    "ModeStep", "OpsBackend", "Selector", "SthosvdResult",
+    "ALS", "DEFAULT_COST_MODEL", "EIG", "SVD",
+    "CostModel", "ModeStep", "OpsBackend", "Selector", "SthosvdResult",
     "TuckerConfig", "TuckerPlan", "TuckerTensor",
     "als_solve", "backend", "backend_names", "cost_model", "decompose",
     "default_selector", "eig_solve", "extract_features", "get_backend",

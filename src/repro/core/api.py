@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import json
 import math
+import sys
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Callable, Sequence
@@ -311,20 +312,93 @@ class TuckerPlan:
         return jax.device_put(x, NamedSharding(self.config.mesh, spec))
 
     # -- execution -----------------------------------------------------------
-    def execute(self, x: jax.Array) -> SthosvdResult:
-        """Run the frozen schedule on ``x`` as one compiled program."""
+    def execute(self, x: jax.Array, *, record: bool = False) -> SthosvdResult:
+        """Run the frozen schedule on ``x`` as one compiled program.
+
+        ``record=True`` (or an active :func:`repro.tune.recording` context)
+        switches to the eager per-step runner so every mode solve gets real
+        wall-clock in its trace — the traces then feed the autotune
+        measurement store (predicted-vs-actual per step, and free training
+        records from production traffic).  Sharded plans have no eager
+        per-step path and reject ``record=True``.
+        """
         x = jnp.asarray(x)
         if tuple(x.shape) != self.shape:
             raise ValueError(f"plan is for shape {self.shape}, got {x.shape}")
         if str(x.dtype) != self.dtype:
             raise ValueError(f"plan is for dtype {self.dtype}, got {x.dtype}")
+        # sys.modules probe: plans that never meet repro.tune pay nothing
+        tune = sys.modules.get("repro.tune")
+        sink = tune.active_sink() if tune is not None else None
+        if (record or sink is not None) and self.backend != "sharded":
+            return self._execute_recorded(x, sink)
+        if record:   # sharded + explicit record: fail loud, not silent
+            raise ValueError(
+                "record=True needs the eager per-step runner, which sharded "
+                "plans do not have (the shard_map sweep is one program); "
+                "collect sharded measurements via sthosvd_distributed")
         core, factors = self._sweep(batched=False)(self._place_input(x))
         return SthosvdResult(
             tucker=TuckerTensor(core=core, factors=list(factors)),
             trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
-                             backend=s.backend)
+                             backend=s.backend, predicted_s=s.predicted_s)
                    for s in self.schedule],
             select_overhead_s=0.0)
+
+    def _execute_recorded(self, x: jax.Array, sink=None) -> SthosvdResult:
+        """Eager mirror of the fused sweeps with per-step wall-clock; feeds
+        the active tune sink (if any) so executed plans become training
+        records."""
+        from . import tensor_ops as T
+        from .plan import run_schedule, solve_step
+        cfg = self.config
+        if cfg.compute_dtype:
+            x = x.astype(jnp.dtype(cfg.compute_dtype))
+        steps = self.schedule
+        n = len(self.shape)
+        if cfg.variant == "sthosvd":
+            core, fdict, seconds = run_schedule(
+                x, steps, sequential=True, als_iters=cfg.als_iters,
+                block_until_ready=True)
+            factors = [fdict[m] for m in range(n)]
+        elif cfg.variant == "thosvd":
+            _, fdict, seconds = run_schedule(
+                x, steps, sequential=False, als_iters=cfg.als_iters,
+                block_until_ready=True)
+            factors = [fdict[m] for m in range(n)]
+            core = x
+            for mode, u in enumerate(factors):
+                core = T.ttm(core, u.T, mode)
+        else:  # hooi: timed init sweep, then timed projected refinements
+            import time as _time
+            core, fdict, seconds = run_schedule(
+                x, steps[:n], sequential=True, als_iters=cfg.als_iters,
+                block_until_ready=True)
+            factors = [fdict[m] for m in range(n)]
+            seconds = list(seconds)
+            for step in steps[n:]:
+                y = x
+                for m, u in enumerate(factors):
+                    if m != step.mode:
+                        y = T.ttm(y, u.T, m)
+                t0 = _time.perf_counter()
+                res = solve_step(y, step, als_iters=cfg.als_iters)
+                jax.block_until_ready(res.u)
+                seconds.append(_time.perf_counter() - t0)
+                factors[step.mode] = res.u
+            core = x
+            for mode, u in enumerate(factors):
+                core = T.ttm(core, u.T, mode)
+        trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
+                           backend=s.backend, predicted_s=s.predicted_s)
+                 for s, dt in zip(steps, seconds)]
+        if sink is not None:
+            sink.add_traces(trace, platform=jax.default_backend(),
+                            dtype=cfg.compute_dtype or self.dtype,
+                            order=n, als_iters=cfg.als_iters)
+        return SthosvdResult(
+            tucker=TuckerTensor(core=core, factors=factors),
+            trace=trace, select_overhead_s=0.0)
 
     def execute_batch(self, xs: jax.Array) -> list[SthosvdResult]:
         """Decompose a fleet of same-shaped tensors (leading batch axis) with
@@ -348,7 +422,7 @@ class TuckerPlan:
                 tucker=TuckerTensor(core=cores[b],
                                     factors=[u[b] for u in factors]),
                 trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
-                                 backend=s.backend)
+                                 backend=s.backend, predicted_s=s.predicted_s)
                        for s in self.schedule],
                 select_overhead_s=0.0))
         return out
@@ -414,18 +488,24 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
     if backend.requires_mesh and config.variant != "sthosvd":
         raise ValueError(f"backend {backend.name!r} supports variant "
                          f"'sthosvd' only, got {config.variant!r}")
+    # selector resolution sees the RESOLVED backend: a per-backend trained
+    # model (repro.tune) outranks the platform-pooled one, and its embedded
+    # (possibly calibrated) cost model prices the schedule either way
+    from .selector import default_selector
     timed = None
     if config.methods == "auto":
         if selector is None:
-            from .selector import default_selector
-            selector = default_selector()
+            selector = default_selector(backend=backend.name)
         selector = timed = TimedSelector(selector)
+    cost_model = getattr(selector, "cost_model", None) or \
+        default_selector(backend=backend.name).cost_model
     schedule = resolve_schedule(
         shape, config.ranks, variant=config.variant, methods=config.methods,
         mode_order=config.mode_order, selector=selector,
         als_iters=config.als_iters, hooi_iters=config.hooi_iters,
         itemsize=compute_dtype.itemsize, backend=backend.name,
-        n_shards=config.n_shards if backend.requires_mesh else 1)
+        n_shards=config.n_shards if backend.requires_mesh else 1,
+        cost_model=cost_model)
     return TuckerPlan(shape=shape, dtype=str(dtype), config=config,
                       schedule=schedule,
                       select_seconds=timed.seconds if timed else 0.0)

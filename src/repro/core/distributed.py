@@ -220,7 +220,7 @@ def sthosvd_distributed(
         x, schedule, mesh, axis, als_iters=als_iters,
         block_until_ready=block_until_ready)
     trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
-                       backend=s.backend)
+                       backend=s.backend, predicted_s=s.predicted_s)
              for s, dt in zip(schedule, seconds)]
     tucker = TuckerTensor(core=y, factors=[factors[m] for m in range(x.ndim)])
     return SthosvdResult(tucker=tucker, trace=trace,

@@ -58,12 +58,15 @@ class ModeStep:
     backend: str = "matfree"   # resolved ops backend (never "auto")
     shard_mode: int | None = None  # mode sharded over the mesh (None = replicated)
     n_shards: int = 1    # devices this step's tensor is split across
+    predicted_s: float = 0.0   # predicted wall-clock (0.0 = no calibrated
+                               # cost model was available at plan time)
 
     def to_dict(self) -> dict:
         return {"mode": self.mode, "method": self.method, "i_n": self.i_n,
                 "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
                 "peak_bytes": self.peak_bytes, "backend": self.backend,
-                "shard_mode": self.shard_mode, "n_shards": self.n_shards}
+                "shard_mode": self.shard_mode, "n_shards": self.n_shards,
+                "predicted_s": self.predicted_s}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModeStep":
@@ -73,7 +76,8 @@ class ModeStep:
                    flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]),
                    backend=str(d.get("backend", "matfree")),
                    shard_mode=None if shard_mode is None else int(shard_mode),
-                   n_shards=int(d.get("n_shards", 1)))
+                   n_shards=int(d.get("n_shards", 1)),
+                   predicted_s=float(d.get("predicted_s", 0.0)))
 
 
 class TimedSelector:
@@ -90,6 +94,11 @@ class TimedSelector:
         self.seconds += time.perf_counter() - t0
         self.calls += 1
         return method
+
+    @property
+    def cost_model(self):
+        """The wrapped selector's (possibly calibrated) cost model, if any."""
+        return getattr(self._selector, "cost_model", None)
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +186,8 @@ def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
 
 def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
                als_iters: int, itemsize: int, backend: str,
-               n_shards: int = 1, shard_mode: int | None = None) -> ModeStep:
+               n_shards: int = 1, shard_mode: int | None = None,
+               cost_model=None) -> ModeStep:
     m = selector(i_n=i_n, r_n=r_n, j_n=j_n) if method is None else method
     if m not in SOLVERS:
         raise ValueError(f"unknown solver {m!r}")
@@ -185,12 +195,17 @@ def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
         shard_mode = None   # SVD matricizes; sharded schedules run it replicated
     eff_shards = n_shards if shard_mode is not None else 1
     scale = get_backend(backend).cost_scale
+    # a calibrated cost model (repro.tune.calibrate) predicts wall-clock per
+    # step; its scales already absorb the backend it was fitted on, so the
+    # registry cost_scale hint is NOT applied on top
+    predicted_s = cost_model.predict_seconds(m, i_n, r_n, j_n, als_iters) \
+        if cost_model is not None and cost_model.calibrated else 0.0
     return ModeStep(mode=mode, method=m, i_n=i_n, r_n=r_n, j_n=j_n,
                     flops=scale * _step_cost(m, i_n, r_n, j_n, als_iters),
                     peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize,
                                                 eff_shards),
                     backend=backend, shard_mode=shard_mode,
-                    n_shards=eff_shards)
+                    n_shards=eff_shards, predicted_s=predicted_s)
 
 
 def resolve_schedule(
@@ -207,6 +222,7 @@ def resolve_schedule(
     itemsize: int = 4,
     backend: str = "matfree",
     n_shards: int = 1,
+    cost_model=None,
 ) -> tuple[ModeStep, ...]:
     """Resolve the full per-mode solver schedule ahead of execution.
 
@@ -225,6 +241,12 @@ def resolve_schedule(
     than the one being solved) that divides by the shard count, via
     :func:`repro.core.distributed.pick_shard_mode` — so reshard points are
     known ahead of execution and ``peak_bytes`` become per-device figures.
+
+    ``cost_model`` (a :class:`repro.core.cost_model.CostModel`) annotates
+    each step with its predicted wall-clock (``ModeStep.predicted_s``) when
+    CALIBRATED (``repro.tune.calibrate``); the textbook model carries no
+    seconds unit, so uncalibrated schedules record 0.0.  When a selector is
+    auto-resolved here, its embedded cost model is used.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
@@ -240,7 +262,11 @@ def resolve_schedule(
     fixed = _resolve_methods(methods, n)
     if fixed is None and selector is None:
         from .selector import default_selector
-        selector = default_selector()
+        selector = default_selector(backend=backend)
+    if cost_model is None:
+        # a trained selector carries the calibration fitted from the same
+        # records; TimedSelector exposes the wrapped selector's cost_model
+        cost_model = getattr(selector, "cost_model", None)
 
     def method_for(mode):
         return None if fixed is None else fixed[mode]
@@ -256,7 +282,8 @@ def resolve_schedule(
             i_n, r_n = shape[mode], ranks[mode]
             steps.append(_make_step(mode, method_for(mode), selector,
                                     i_n, r_n, size // i_n, als_iters,
-                                    itemsize, backend))
+                                    itemsize, backend,
+                                    cost_model=cost_model))
         return tuple(steps)
 
     # st-HOSVD sweep (also HOOI's init): the tensor shrinks between steps
@@ -271,7 +298,8 @@ def resolve_schedule(
                 if n_shards > 1 else None
             steps.append(_make_step(mode, method_for(mode), selector,
                                     i_n, r_n, j_n, als_iters, itemsize,
-                                    backend, n_shards, shard))
+                                    backend, n_shards, shard,
+                                    cost_model=cost_model))
             cur[mode] = r_n
     if variant == "sthosvd":
         return tuple(steps)
@@ -285,7 +313,7 @@ def resolve_schedule(
             j_n = rank_prod // r_n
             steps.append(_make_step(mode, method_for(mode), selector,
                                     i_n, r_n, j_n, als_iters, itemsize,
-                                    backend))
+                                    backend, cost_model=cost_model))
     return tuple(steps)
 
 

@@ -2,28 +2,31 @@
 
 Features (paper Table I), label = argmin(measured time of EIG vs ALS) on the
 current platform.  A trained :class:`repro.core.dtree.DecisionTree` is stored
-as JSON per platform; when absent, the analytic Eq.4/5 cost model is the
-fallback so the flexible algorithm never blocks on training data.
+as JSON per ``(platform, backend)`` — ``matfree`` vs ``explicit`` vs
+``pallas`` shift the EIG/ALS crossover, so the hardware axis the paper's
+selector absorbs includes the ops backend, not just the chip.  Resolution
+falls back gracefully: exact ``(platform, backend)`` model → platform-only
+model → analytic Eq.4/5 cost model (hardware-calibrated when
+:mod:`repro.tune.calibrate` has run, textbook constants otherwise), so the
+flexible algorithm never blocks on training data.
 
-The training harness (:func:`collect_samples` + :func:`train_selector`)
-mirrors the paper's pipeline: random third-order tensors, dims in a
-configurable range (paper: [10, 10000]; scaled down by default for this
-1-core box — see DESIGN.md §8), truncation in [max(1, 10), 0.5·I_n],
-70/30 train/test split, grid-search CV over max_depth and class weights.
+Training lives in :mod:`repro.tune` (measurement store + stratified
+training + calibration — the autotune flywheel); the ``collect_samples`` /
+``train_selector`` / ``train_and_save`` names below are kept as thin
+wrappers over it for existing call sites.
 """
 
 from __future__ import annotations
 
 import json
 import os
-import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from pathlib import Path
 
 import numpy as np
 
-from .cost_model import predicted_best
-from .dtree import DecisionTree, grid_search_cv
+from .cost_model import DEFAULT_COST_MODEL, CostModel
+from .dtree import DecisionTree
 
 FEATURE_NAMES = (
     "I_n", "R_n", "J_n",
@@ -35,6 +38,8 @@ _DEFAULT_MODEL_DIR = Path(os.environ.get(
     "ATUCKER_MODEL_DIR", Path(__file__).resolve().parent / "models"))
 
 LABELS = ("eig", "als")   # class 0 = eig, class 1 = als
+
+SELECTOR_FORMAT_VERSION = 2
 
 
 def extract_features(i_n: int, r_n: int, j_n: int) -> np.ndarray:
@@ -54,16 +59,26 @@ class Selector:
     Guardrail: decision trees extrapolate badly; queries outside the trained
     feature range (× margin) defer to the analytic Eq.4/5 cost model — the
     paper's huge-mode regime (Air: I_n = 30648) must never be mispredicted
-    by a tree that was trained on smaller dims.
+    by a tree that was trained on smaller dims.  ``cost_model`` is that
+    fallback's constants: textbook by default, hardware-fitted when the
+    model file embeds a calibration (:mod:`repro.tune.calibrate`).
+
+    ``backend`` records which ops backend the training measurements ran
+    through (None = pooled across backends / unknown); ``meta`` carries the
+    training provenance written by :mod:`repro.tune.train` (sample counts,
+    CV/test accuracy, store digest, trained dim range).
     """
     tree: DecisionTree | None = None
     platform: str = "unknown"
+    backend: str | None = None
     trained_range: tuple | None = None   # ((min_i, min_r, min_j), (max_i, max_r, max_j))
     range_margin: float = 2.0
+    cost_model: CostModel = field(default_factory=lambda: DEFAULT_COST_MODEL)
+    meta: dict = field(default_factory=dict)
 
     def __call__(self, *, i_n: int, r_n: int, j_n: int) -> str:
         if self.tree is None or self._out_of_range(i_n, r_n, j_n):
-            return predicted_best(i_n, r_n, j_n)
+            return self.cost_model.predicted_best(i_n, r_n, j_n)
         return LABELS[self.tree.predict_one(extract_features(i_n, r_n, j_n))]
 
     def _out_of_range(self, i_n, r_n, j_n) -> bool:
@@ -78,11 +93,20 @@ class Selector:
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str | Path) -> None:
+        if self.tree is None:
+            raise ValueError(
+                "cannot save a selector with no trained tree (the cost-model "
+                "fallback needs no file); train one first, e.g. "
+                "`python -m repro.tune train`")
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(
-            {"platform": self.platform, "tree": self.tree.to_dict(),
-             "trained_range": self.trained_range}))
+            {"version": SELECTOR_FORMAT_VERSION,
+             "platform": self.platform, "backend": self.backend,
+             "tree": self.tree.to_dict(),
+             "trained_range": self.trained_range,
+             "cost_model": self.cost_model.to_dict(),
+             "meta": self.meta}, indent=1))
 
     @classmethod
     def load(cls, path: str | Path) -> "Selector":
@@ -90,132 +114,109 @@ class Selector:
         rng = d.get("trained_range")
         if rng is not None:
             rng = (tuple(rng[0]), tuple(rng[1]))
+        cm = d.get("cost_model")
         return cls(tree=DecisionTree.from_dict(d["tree"]),
-                   platform=d["platform"], trained_range=rng)
+                   platform=d["platform"], backend=d.get("backend"),
+                   trained_range=rng,
+                   cost_model=(CostModel.from_dict(cm) if cm
+                               else DEFAULT_COST_MODEL),
+                   meta=d.get("meta", {}))
 
 
-def model_path(platform: str | None = None) -> Path:
+def model_dir() -> Path:
+    """The selector/calibration model directory (``ATUCKER_MODEL_DIR`` env
+    override, default ``repro/core/models`` — where the shipped CPU model
+    lives)."""
+    return _DEFAULT_MODEL_DIR
+
+
+def model_path(platform: str | None = None,
+               backend: str | None = None) -> Path:
     import jax
     platform = platform or jax.default_backend()
-    return _DEFAULT_MODEL_DIR / f"selector_{platform}.json"
+    stem = f"selector_{platform}" + (f"_{backend}" if backend else "")
+    return _DEFAULT_MODEL_DIR / f"{stem}.json"
 
 
-_DEFAULT_BY_PLATFORM: dict[str, Selector] = {}
+def calibration_path(platform: str, backend: str) -> Path:
+    """Standalone calibrated-cost-model file (written by
+    ``python -m repro.tune calibrate``); also embedded into selector files
+    at train time."""
+    return _DEFAULT_MODEL_DIR / f"cost_{platform}_{backend}.json"
 
 
-def default_selector(platform: str | None = None) -> Selector:
-    """Trained tree for ``platform`` (default: current JAX backend) if present,
-    else cost-model fallback.  Cached per platform, so CPU and GPU model files
-    resolve correctly side by side in one process."""
+def load_calibration(platform: str, backend: str | None) -> CostModel | None:
+    """The fitted CostModel for (platform, backend) if one is on disk."""
+    if backend is None:
+        return None
+    p = calibration_path(platform, backend)
+    if not p.exists():
+        return None
+    return CostModel.from_dict(json.loads(p.read_text()))
+
+
+_DEFAULT_BY_PLATFORM: dict[tuple[str, str | None], Selector] = {}
+
+
+def default_selector(platform: str | None = None,
+                     backend: str | None = None) -> Selector:
+    """Trained tree for ``(platform, backend)`` if present, else the
+    platform-pooled tree, else cost-model fallback (hardware-calibrated when
+    a calibration file exists for the pair).  Cached per (platform, backend),
+    so CPU and GPU model files — and per-backend refinements — resolve
+    correctly side by side in one process.
+    """
     import jax
     platform = platform or jax.default_backend()
-    sel = _DEFAULT_BY_PLATFORM.get(platform)
+    key = (platform, backend)
+    sel = _DEFAULT_BY_PLATFORM.get(key)
     if sel is None:
-        p = model_path(platform)
-        sel = Selector.load(p) if p.exists() else Selector(platform=platform)
-        _DEFAULT_BY_PLATFORM[platform] = sel
+        for p in ([model_path(platform, backend)] if backend else []) + \
+                [model_path(platform)]:
+            if p.exists():
+                sel = Selector.load(p)
+                break
+        if sel is None:
+            sel = Selector(platform=platform, backend=backend,
+                           cost_model=load_calibration(platform, backend)
+                           or DEFAULT_COST_MODEL)
+        _DEFAULT_BY_PLATFORM[key] = sel
     return sel
 
 
+def clear_selector_cache() -> None:
+    """Drop cached default selectors (tests / after retraining in-process)."""
+    _DEFAULT_BY_PLATFORM.clear()
+
+
 # ---------------------------------------------------------------------------
-# Training pipeline (paper Sec. IV-B)
+# Training pipeline — thin wrappers over repro.tune (the autotune subsystem)
 # ---------------------------------------------------------------------------
 
-def _time_solver(y, mode, rank, method: str, reps: int = 2) -> float:
-    import jax
-    from .solvers import SOLVERS
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(SOLVERS[method](y, mode, rank))
-        best = min(best, time.perf_counter() - t0)
-    return best
+def collect_samples(*args, **kw):
+    """Legacy shim → :func:`repro.tune.collect.collect_samples` (same
+    signature/return: ``(features, labels, times)`` arrays)."""
+    from ..tune.collect import collect_samples as _collect
+    return _collect(*args, **kw)
 
 
-def collect_samples(
-    n_tensors: int = 120,
-    dim_range: tuple[int, int] = (10, 192),
-    seed: int = 0,
-    order: int = 3,
-    dtype=np.float32,
-    verbose: bool = False,
-):
-    """Time EIG vs ALS per mode on random tensors → (features, labels, times).
-
-    One record per (tensor, mode), as in the paper ("the statistics of each
-    mode constitute a record").  Warm-up compile is excluded by timing the
-    best of ``reps`` runs after a throwaway call.
-    """
-    import jax
-    import jax.numpy as jnp
-    rng = np.random.default_rng(seed)
-
-    def log_uniform(lo, hi):
-        return int(round(np.exp(rng.uniform(np.log(lo), np.log(hi)))))
-
-    feats, labels, times = [], [], []
-    for t in range(n_tensors):
-        # log-uniform dims/ranks: covers the asymmetric shapes (one huge mode,
-        # tiny others — the paper's Air-tensor regime) where the EIG/ALS
-        # crossover lives, even at scaled-down absolute sizes.
-        dims = tuple(log_uniform(dim_range[0], dim_range[1]) for _ in range(order))
-        ranks = tuple(log_uniform(max(1, min(4, d // 2)), max(2, d // 2))
-                      for d in dims)
-        x = jnp.asarray(rng.standard_normal(dims), dtype=dtype)
-        for mode in range(order):
-            i_n, r_n = dims[mode], ranks[mode]
-            j_n = int(np.prod(dims)) // i_n
-            # throwaway to exclude compile time, then measure
-            _time_solver(x, mode, r_n, "eig", reps=1)
-            _time_solver(x, mode, r_n, "als", reps=1)
-            te = _time_solver(x, mode, r_n, "eig")
-            ta = _time_solver(x, mode, r_n, "als")
-            feats.append(extract_features(i_n, r_n, j_n))
-            labels.append(0 if te <= ta else 1)
-            times.append((te, ta))
-        if verbose and (t + 1) % 10 == 0:
-            print(f"[selector] {t + 1}/{n_tensors} tensors sampled")
-    return np.array(feats), np.array(labels), np.array(times)
-
-
-def train_selector(
-    feats: np.ndarray,
-    labels: np.ndarray,
-    test_split: float = 0.3,
-    seed: int = 0,
-) -> tuple[Selector, dict]:
-    """70/30 split + grid-search CV (paper defaults)."""
-    rng = np.random.default_rng(seed)
-    perm = rng.permutation(len(labels))
-    n_test = int(len(labels) * test_split)
-    test, train = perm[:n_test], perm[n_test:]
-    tree, info = grid_search_cv(feats[train], labels[train])
-    info["test_accuracy"] = tree.score(feats[test], labels[test])
-    info["n_train"], info["n_test"] = len(train), len(test)
-    import jax
-    rng3 = (tuple(float(v) for v in feats[:, :3].min(0)),
-            tuple(float(v) for v in feats[:, :3].max(0)))
-    sel = Selector(tree=tree, platform=jax.default_backend(),
-                   trained_range=rng3)
-    return sel, info
+def train_selector(*args, **kw):
+    """Legacy shim → :func:`repro.tune.train.train_selector`."""
+    from ..tune.train import train_selector as _train
+    return _train(*args, **kw)
 
 
 def train_and_save(platform: str | None = None, **collect_kw) -> dict:
-    import jax
-    feats, labels, _ = collect_samples(**collect_kw)
-    sel, info = train_selector(feats, labels)
-    sel.save(model_path(platform))
-    _DEFAULT_BY_PLATFORM[platform or jax.default_backend()] = sel
-    return info
+    """Legacy shim → :func:`repro.tune.train.train_and_save`.  The trained
+    selector is labeled with, saved under, and cached for ONE platform
+    string: ``platform`` if given, else the current JAX backend."""
+    from ..tune.train import train_and_save as _tas
+    return _tas(platform=platform, **collect_kw)
 
 
 if __name__ == "__main__":  # pragma: no cover
-    import argparse
-    ap = argparse.ArgumentParser(description="Train the a-Tucker solver selector")
-    ap.add_argument("--n-tensors", type=int, default=120)
-    ap.add_argument("--max-dim", type=int, default=192)
-    ap.add_argument("--verbose", action="store_true")
-    args = ap.parse_args()
-    info = train_and_save(n_tensors=args.n_tensors,
-                          dim_range=(10, args.max_dim), verbose=args.verbose)
-    print(json.dumps(info, indent=2))
+    import sys
+    print("the selector training CLI moved to the autotune subsystem:\n"
+          "  python -m repro.tune collect && python -m repro.tune train\n"
+          "(see README §Autotuning)", file=sys.stderr)
+    sys.exit(2)

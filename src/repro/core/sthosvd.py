@@ -60,8 +60,11 @@ class ModeTrace:
     i_n: int
     r_n: int
     j_n: int
-    seconds: float
+    seconds: float             # measured wall-clock (0.0 inside fused sweeps)
     backend: str = "matfree"   # ops backend the solve ran on
+    predicted_s: float = 0.0   # plan-time prediction from a calibrated cost
+                               # model (0.0 = uncalibrated) — compare with
+                               # ``seconds`` for predicted-vs-actual drift
 
 
 @dataclass
@@ -114,7 +117,7 @@ def sthosvd(
         x, schedule, sequential=True, als_iters=als_iters,
         block_until_ready=block_until_ready)
     trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
-                       backend=s.backend)
+                       backend=s.backend, predicted_s=s.predicted_s)
              for s, dt in zip(schedule, seconds)]
     tucker = TuckerTensor(core=core, factors=[factors[m] for m in range(x.ndim)])
     return SthosvdResult(tucker=tucker, trace=trace,

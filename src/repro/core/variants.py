@@ -53,7 +53,7 @@ def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
         x, schedule, sequential=False, als_iters=als_iters,
         block_until_ready=block_until_ready)
     trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
-                       backend=s.backend)
+                       backend=s.backend, predicted_s=s.predicted_s)
              for s, dt in zip(schedule, seconds)]
     core = x
     for mode in range(x.ndim):
@@ -97,7 +97,8 @@ def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
         factors[step.mode] = res.u
         trace.append(ModeTrace(step.mode, step.method, step.i_n, step.r_n,
                                step.j_n, time.perf_counter() - t0,
-                               backend=step.backend))
+                               backend=step.backend,
+                               predicted_s=step.predicted_s))
 
     core = x
     for mode, u in enumerate(factors):

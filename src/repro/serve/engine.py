@@ -70,12 +70,25 @@ class ServeEngine:
             lambda full, s: full.at[:, slot:slot + 1].set(s), self.cache, slot_cache)
         self.pos[slot] = len(req.prompt)
         self.slot_req[slot] = req
-        first = self._sample(logits[:, -1])
+        first = self._sample(logits[:, -1], np.array([req.temperature]))
         req.output.append(int(first[0]))
 
-    def _sample(self, logits):
+    def _sample(self, logits, temps):
+        """Next token per row: greedy at temperature 0, categorical above.
+
+        ``temps`` is one temperature per logits row (slots run mixed
+        temperatures in one batched step).  The PRNG key is only consumed
+        when some row actually samples — an all-greedy batch is fully
+        deterministic and key-free.
+        """
+        temps = np.asarray(temps, np.float32)
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        if not (temps > 0).any():
+            return greedy
         self.key, k = jax.random.split(self.key)
-        return np.asarray(jnp.argmax(logits, -1))
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)
+        sampled = np.asarray(jax.random.categorical(k, scaled, axis=-1))
+        return np.where(temps > 0, sampled, greedy)
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests: list[Request]) -> list[Request]:
@@ -89,13 +102,15 @@ class ServeEngine:
             # one batched decode step: feed each slot its last token at its
             # OWN position (per-slot position vector)
             last = np.zeros((self.b, 1), np.int32)
+            temps = np.zeros(self.b, np.float32)
             for s, r in enumerate(self.slot_req):
                 if r is not None and r.output:
                     last[s, 0] = r.output[-1]
+                    temps[s] = r.temperature
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(last), self.cache,
                 jnp.asarray(self.pos, jnp.int32))
-            nxt = self._sample(logits[:, 0])
+            nxt = self._sample(logits[:, 0], temps)
             for s, r in enumerate(self.slot_req):
                 if r is None:
                     continue
