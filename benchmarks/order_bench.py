@@ -1,0 +1,142 @@
+"""Mode-order schedule bench: natural vs shrink vs DP-opt on asymmetric
+shapes, plus the memory-cap and donated-sweep regimes.
+
+For each asymmetric (shape, ranks) case the bench plans the same job under
+``mode_order=None`` (the paper's 1..N sweep), ``"shrink"`` (greedy
+compression-ratio heuristic) and ``"opt"`` (exact subset DP,
+:mod:`repro.core.schedule_opt`), and times one compiled sweep per plan —
+the wall-clock answer to "does plan-time schedule search pay?".  Each row
+also records the plan's modeled per-device peak bytes, so the memory side
+of the search is tracked across PRs alongside the speed side.
+
+Two extra row families feed the acceptance criteria:
+
+  * ``cap``: re-plans the worst case with ``memory_cap_bytes`` below the
+    unconstrained peak and reports the capped plan's modeled peak (or the
+    plan-time MemoryCapError when the cap is simply infeasible).
+  * ``donate``: measured ``jax.live_arrays`` high-water of a donated vs
+    undonated sweep — the runtime evidence that donation returns the dead
+    copy of X.
+
+Usage:  python -m benchmarks.order_bench [--full] [--out BENCH_order.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MemoryCapError, TuckerConfig, plan
+
+from .common import emit, lowrank_tensor, time_call
+
+# asymmetric shapes where processing order genuinely moves J_n: one mode
+# barely compresses (natural order wastes the early shrink) while another
+# collapses hard; full = paper-adjacent dims
+CASES = {
+    False: [((48, 224, 128), (40, 8, 12)),
+            ((40, 192, 112), (32, 8, 14)),
+            ((48, 32, 160), (6, 24, 10))],
+    True: [((64, 384, 256), (48, 16, 32)),
+           ((80, 384, 224), (64, 16, 28)),
+           ((384, 64, 256), (16, 48, 32))],
+}
+
+ORDERS = ((None, "natural"), ("shrink", "shrink"), ("opt", "opt"))
+
+
+def _live_bytes() -> int:
+    return sum(a.nbytes for a in jax.live_arrays())
+
+
+def bench_orders(full: bool = False, reps: int = 5) -> list[dict]:
+    rows: list[dict] = []
+    for dims, ranks in CASES[full]:
+        x = lowrank_tensor(dims, ranks, noise=0.05)
+        tag = "x".join(map(str, dims))
+        for mode_order, name in ORDERS:
+            cfg = TuckerConfig(ranks=ranks, mode_order=mode_order,
+                               donate_input=False)
+            p = plan(x.shape, x.dtype, cfg)
+            t = time_call(lambda: jax.block_until_ready(
+                p.execute(x).tucker.core), reps=reps)
+            emit(f"order/{name}/{tag}", t,
+                 f"order={[s.mode for s in p.schedule]}")
+            rows.append({
+                "bench": "order", "mode_order": name, "shape": list(dims),
+                "ranks": list(ranks), "us_per_call": t * 1e6,
+                "order": [s.mode for s in p.schedule],
+                "methods": list(p.methods),
+                "peak_mb": p.peak_bytes / 1e6,
+                "predicted_s": p.total_predicted_s,
+            })
+
+    # memory-cap regime: cap below the natural plan's peak on the case
+    # where reordering buys the most headroom
+    dims, ranks = CASES[full][0]
+    x = lowrank_tensor(dims, ranks, noise=0.05)
+    nat = plan(x.shape, x.dtype, TuckerConfig(ranks=ranks))
+    cap = int(max(s.peak_bytes for s in nat.schedule) * 0.8)
+    row = {"bench": "order_cap", "shape": list(dims), "ranks": list(ranks),
+           "cap_mb": cap / 1e6, "uncapped_peak_mb": nat.peak_bytes / 1e6}
+    try:
+        capped = plan(x.shape, x.dtype,
+                      TuckerConfig(ranks=ranks, mode_order="opt",
+                                   memory_cap_bytes=cap))
+        t = time_call(lambda: jax.block_until_ready(
+            capped.execute(x).tucker.core), reps=reps)
+        row.update(mode_order="opt", us_per_call=t * 1e6,
+                   peak_mb=capped.peak_bytes / 1e6,
+                   cap_ok=capped.peak_bytes <= cap)
+        emit(f"order/cap/{'x'.join(map(str, dims))}", t,
+             f"peak={capped.peak_bytes} cap={cap}")
+    except MemoryCapError as e:   # pragma: no cover - shape-dependent
+        row.update(infeasible=True, error=str(e)[:120])
+    rows.append(row)
+
+    # donation regime: measured live-array high-water, held results included
+    dims, ranks = CASES[full][0]
+    xn = np.asarray(lowrank_tensor(dims, ranks, noise=0.05))
+    p = plan(xn.shape, jnp.float32, TuckerConfig(ranks=ranks))
+
+    def high_water(donate: bool) -> int:
+        base = _live_bytes()
+        xd = jnp.asarray(xn)
+        res = p.execute(xd, donate=donate)
+        jax.block_until_ready(res.tucker.core)
+        hw = _live_bytes() - base
+        del xd, res
+        return hw
+
+    hw_un, hw_don = high_water(False), high_water(True)
+    emit(f"order/donate/{'x'.join(map(str, dims))}", 0.0,
+         f"undonated={hw_un} donated={hw_don}")
+    rows.append({"bench": "order_donate", "shape": list(dims),
+                 "ranks": list(ranks), "undonated_hw_mb": hw_un / 1e6,
+                 "donated_hw_mb": hw_don / 1e6,
+                 "donation_wins": hw_don < hw_un})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None, help="write BENCH_order.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows = bench_orders(full=args.full)
+    if args.out:
+        doc = {"bench": "order", "platform": jax.default_backend(),
+               "host": _platform.node(), "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

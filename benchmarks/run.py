@@ -14,12 +14,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_bench as bb
+    from . import order_bench as ob
     from . import paper_figs as pf
     from . import selector_bench as selb
     from . import system_bench as sb
 
     benches = {
         "backend": lambda: bb.bench_backends(full=args.full),
+        "order": lambda: ob.bench_orders(full=args.full),
         "selector_sweep": lambda: (selb.bench_sweeps(full=args.full),
                                    selb.bench_selection_overhead()),
         "fig2": lambda: pf.fig2_solver_variants(full=args.full),

@@ -18,8 +18,9 @@ from pathlib import Path
 #: columns shown first, in this order, when any row carries them; remaining
 #: keys are folded into a trailing ``notes`` column
 PREFERRED = ("source", "bench", "backend", "op", "methods", "selector",
-             "n_devices", "shape", "ranks", "us_per_call", "rel_err")
-SKIP = {"mode", "r", "native"}   # low-signal noise in a cross-bench table
+             "mode_order", "n_devices", "shape", "ranks", "us_per_call",
+             "peak_mb", "rel_err")
+SKIP = {"mode", "r", "native", "order"}   # low-signal noise in a cross-bench table
 
 
 def _fmt(v) -> str:

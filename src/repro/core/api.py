@@ -23,8 +23,10 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import sys
 from dataclasses import dataclass
+from functools import lru_cache
 from pathlib import Path
 from typing import Callable, Sequence
 
@@ -94,6 +96,31 @@ class TuckerConfig:
     axis the tensor is sharded over (default: the mesh's first axis).  The
     mesh serializes as its SPEC (axis names + sizes, see :func:`mesh_spec`)
     — device handles never enter plan JSON.
+
+    ``mode_order`` orders the st-HOSVD sweep: ``None`` (the paper's 1..N),
+    an explicit permutation, ``"shrink"`` (greedy compression-ratio
+    heuristic), or ``"opt"`` — the exact subset-DP schedule search
+    (:mod:`repro.core.schedule_opt`) that jointly picks order AND per-step
+    solver against the cost model's predicted total, under
+    ``memory_cap_bytes`` when set.
+
+    ``memory_cap_bytes`` is a hard per-device ceiling on every step's
+    modeled peak working set: plans that cannot fit raise
+    :class:`~repro.core.schedule_opt.MemoryCapError` at plan time naming
+    the binding step (the paper's GPU OOM regime, decided before any
+    allocation).
+
+    ``donate_input`` controls whether the compiled sweep donates its input
+    buffer to XLA (``jax.jit(donate_argnums=0)``) so a sweep stops holding
+    a dead copy of X.  ``None`` (auto, the default) donates only the device
+    copy ``execute`` itself materialized from a host array — a caller's
+    jax array is never invalidated silently; ``True`` always donates (the
+    input is CONSUMED — ``x`` is unusable after ``execute(x)``); ``False``
+    disables donation by default (an explicit per-call
+    ``execute(x, donate=True)`` still wins — the caller owns the buffer).
+    Donation is automatically disabled where unsupported
+    (sharded shard_map sweeps, interpret-mode backends, platforms without
+    buffer aliasing) and globally via the ``ATUCKER_NO_DONATE`` env var.
     """
     ranks: tuple[int, ...]
     variant: str = "sthosvd"
@@ -105,6 +132,8 @@ class TuckerConfig:
     compute_dtype: str | None = None
     mesh: Mesh | None = None
     shard_axis: str | None = None
+    memory_cap_bytes: int | None = None
+    donate_input: bool | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "ranks", tuple(int(r) for r in self.ranks))
@@ -113,6 +142,16 @@ class TuckerConfig:
         if isinstance(self.mode_order, (list, tuple)):
             object.__setattr__(self, "mode_order",
                                tuple(int(m) for m in self.mode_order))
+        if isinstance(self.mode_order, str) and \
+                self.mode_order not in ("shrink", "opt"):
+            raise ValueError(f"mode_order {self.mode_order!r} must be a "
+                             "permutation, 'shrink', 'opt', or None")
+        if self.memory_cap_bytes is not None:
+            object.__setattr__(self, "memory_cap_bytes",
+                               int(self.memory_cap_bytes))
+            if self.memory_cap_bytes <= 0:
+                raise ValueError("memory_cap_bytes must be a positive byte "
+                                 "count (None = uncapped)")
         if self.variant not in VARIANTS:
             raise ValueError(f"unknown variant {self.variant!r}; "
                              f"expected one of {VARIANTS}")
@@ -158,7 +197,9 @@ class TuckerConfig:
                 "hooi_iters": self.hooi_iters,
                 "compute_dtype": self.compute_dtype,
                 "mesh": mesh_spec(self.mesh),
-                "shard_axis": self.shard_axis}
+                "shard_axis": self.shard_axis,
+                "memory_cap_bytes": self.memory_cap_bytes,
+                "donate_input": self.donate_input}
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuckerConfig":
@@ -173,7 +214,37 @@ class TuckerConfig:
                    hooi_iters=d.get("hooi_iters", 3),
                    compute_dtype=d.get("compute_dtype"),
                    mesh=mesh_from_spec(d.get("mesh")),
-                   shard_axis=d.get("shard_axis"))
+                   shard_axis=d.get("shard_axis"),
+                   memory_cap_bytes=d.get("memory_cap_bytes"),
+                   donate_input=d.get("donate_input"))
+
+
+# ---------------------------------------------------------------------------
+# Input-buffer donation
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def donation_supported(platform: str) -> bool:
+    """Whether XLA honours input-output buffer aliasing on ``platform``.
+
+    Probed once per process per platform by compiling a tiny donated
+    program ON that platform's first device and checking the input buffer
+    was actually invalidated — runtimes without aliasing (older CPU
+    backends) silently ignore ``donate_argnums`` with a warning, and a
+    sweep "donated" there would keep the dead copy of X alive anyway.
+    """
+    import warnings
+    try:
+        dev = jax.devices(platform)[0]
+        # fresh, unshared buffer committed to the probed platform
+        x = jax.device_put(jnp.zeros((2,), jnp.float32) + 1.0, dev)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            jax.block_until_ready(
+                jax.jit(lambda a: a * 2.0, donate_argnums=0)(x))
+        return bool(x.is_deleted())
+    except Exception:  # pragma: no cover - defensive: treat as unsupported
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -192,13 +263,15 @@ def clear_sweep_cache() -> None:
     CACHE_STATS.update(builds=0, hits=0, traces=0)
 
 
-def _make_sweep(p: "TuckerPlan", batched: bool) -> Callable:
+def _make_sweep(p: "TuckerPlan", batched: bool, donate: bool = False) -> Callable:
     steps = p.schedule   # each step carries its resolved ops backend
     cfg = p.config
     n_init = len(p.shape)  # HOOI: first full sweep is the st-HOSVD init
     cdtype = jnp.dtype(cfg.compute_dtype) if cfg.compute_dtype else None
 
     if p.backend == "sharded":
+        # donation is guarded off for shard_map sweeps upstream
+        # (_resolve_donate); never build an aliasing program here
         from .distributed import sweep_sharded
         if cfg.mesh is None:
             raise RuntimeError(
@@ -230,7 +303,28 @@ def _make_sweep(p: "TuckerPlan", batched: bool) -> Callable:
             return sweep_thosvd(x, steps, als_iters=cfg.als_iters)
         return sweep_hooi(x, steps, als_iters=cfg.als_iters, n_init=n_init)
 
-    return jax.jit(jax.vmap(sweep) if batched else sweep)
+    jitted = jax.jit(jax.vmap(sweep) if batched else sweep,
+                     donate_argnums=(0,) if donate else ())
+    if not donate:
+        return jitted
+
+    def donating(x):
+        # donate_argnums lets XLA alias X into any shape-matching output;
+        # a Tucker sweep's outputs (core + factors) rarely match, in which
+        # case XLA ignores the donation (with a warning) and the dead copy
+        # of X would survive the whole sweep — so release it explicitly
+        # right after dispatch (the runtime holds its own reference while
+        # the async execution still needs it).
+        import warnings
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            out = jitted(x)
+        if not x.is_deleted():
+            x.delete()
+        return out
+
+    return donating
 
 
 # ---------------------------------------------------------------------------
@@ -273,26 +367,93 @@ class TuckerPlan:
         return sum(s.flops for s in self.schedule)
 
     @property
-    def peak_bytes(self) -> int:
-        return max(s.peak_bytes for s in self.schedule)
+    def total_predicted_s(self) -> float:
+        """Predicted sweep wall-clock: the sum of the per-step calibrated
+        cost-model predictions (0.0 when no calibration was available at
+        plan time — compare against summed ``ModeTrace.seconds``)."""
+        return sum(s.predicted_s for s in self.schedule)
 
-    def _cache_key(self, batched: bool) -> tuple:
+    @property
+    def input_bytes(self) -> int:
+        """Per-device bytes of the caller's input buffer — the plan's
+        STORAGE dtype, not the compute dtype (the cast happens inside the
+        jit; the buffer an undonated sweep keeps alive is x as passed) —
+        divided by the first step's shard count for sharded plans."""
+        return math.prod(self.shape) * jnp.dtype(self.dtype).itemsize \
+            // self.schedule[0].n_shards
+
+    @property
+    def donates(self) -> bool:
+        """Whether this plan's compiled sweep donates its input under the
+        resolved static policy (config / env / backend guards; the ``None``
+        auto policy counts as donating — the recommended host-input path
+        materializes its own device copy, which IS donated)."""
+        return self._resolve_donate(created=True, override=None)
+
+    @property
+    def peak_bytes(self) -> int:
+        """Modeled per-device peak across the sweep, donation-aware: an
+        undonated st-HOSVD sweep keeps the caller's (dead after step 0)
+        input copy alive through every later step, so those steps charge
+        ``input_bytes`` on top of their own working set; a donated sweep
+        returns that buffer to XLA and pays only the per-step peaks."""
+        base = max(s.peak_bytes for s in self.schedule)
+        if self.config.variant != "sthosvd" or self.donates or \
+                len(self.schedule) == 1:
+            # t-HOSVD/HOOI read X in (almost) every step — it is already
+            # counted in their per-step io, donated or not
+            return base
+        extra = self.input_bytes
+        return max(self.schedule[0].peak_bytes,
+                   max(s.peak_bytes + extra for s in self.schedule[1:]))
+
+    def _resolve_donate(self, created: bool, override: bool | None) -> bool:
+        """Donation decision for one execute call.  ``created`` = the device
+        buffer was materialized by execute itself (host input), so donating
+        it can never invalidate a caller-held array.  ``override`` is the
+        per-call argument; an explicit ``True``/``False`` at the call site
+        beats ``config.donate_input`` (the caller owns the buffer), while
+        the env escape hatch and the backend/platform guards beat both."""
+        if override is False:
+            return False
+        if os.environ.get("ATUCKER_NO_DONATE"):
+            return False
+        if self.backend == "sharded":
+            return False   # shard_map sweep: donation aliases live shards
+        try:
+            b = get_backend(self.backend)
+        except ValueError:   # hand-built plan mixing backends per step
+            return False
+        if not b.native_on(jax.default_backend()):
+            return False   # interpret-mode fallback: never alias a buffer
+                           # the interpreter may still read
+        if not donation_supported(jax.default_backend()):
+            return False
+        if override:       # per-call donate=True: consume x as documented
+            return True
+        cfg = self.config
+        if cfg.donate_input is not None:
+            return bool(cfg.donate_input)
+        return created     # auto: only the copy execute itself materialized
+
+    def _cache_key(self, batched: bool, donate: bool = False) -> tuple:
         # keyed on the RESOLVED per-step backend, not config.impl: two plans
         # whose "auto" resolved identically share one compiled sweep; sharded
         # plans additionally key on the mesh + frozen shard modes (a program
-        # compiled for one device set never serves another)
+        # compiled for one device set never serves another); donated and
+        # undonated variants are distinct programs (aliasing is compiled in)
         return (self.shape, self.dtype,
                 tuple((s.mode, s.method, s.r_n, s.backend, s.shard_mode)
                       for s in self.schedule),
                 self.config.variant, self.config.als_iters,
-                self.config.compute_dtype, batched,
+                self.config.compute_dtype, batched, donate,
                 self.config.mesh, self.config.resolved_shard_axis)
 
-    def _sweep(self, batched: bool) -> Callable:
-        key = self._cache_key(batched)
+    def _sweep(self, batched: bool, donate: bool = False) -> Callable:
+        key = self._cache_key(batched, donate)
         fn = _SWEEP_CACHE.get(key)
         if fn is None:
-            fn = _SWEEP_CACHE[key] = _make_sweep(self, batched)
+            fn = _SWEEP_CACHE[key] = _make_sweep(self, batched, donate)
             CACHE_STATS["builds"] += 1
         else:
             CACHE_STATS["hits"] += 1
@@ -312,7 +473,8 @@ class TuckerPlan:
         return jax.device_put(x, NamedSharding(self.config.mesh, spec))
 
     # -- execution -----------------------------------------------------------
-    def execute(self, x: jax.Array, *, record: bool = False) -> SthosvdResult:
+    def execute(self, x: jax.Array, *, record: bool = False,
+                donate: bool | None = None) -> SthosvdResult:
         """Run the frozen schedule on ``x`` as one compiled program.
 
         ``record=True`` (or an active :func:`repro.tune.recording` context)
@@ -321,7 +483,14 @@ class TuckerPlan:
         measurement store (predicted-vs-actual per step, and free training
         records from production traffic).  Sharded plans have no eager
         per-step path and reject ``record=True``.
+
+        ``donate`` overrides ``config.donate_input`` for this call: ``True``
+        donates ``x``'s buffer into the sweep (``x`` is CONSUMED — deleted
+        after the call), ``False`` never donates, ``None`` follows the
+        config policy (auto: donate only the device copy this call itself
+        materialized from a host array).
         """
+        xin = x
         x = jnp.asarray(x)
         if tuple(x.shape) != self.shape:
             raise ValueError(f"plan is for shape {self.shape}, got {x.shape}")
@@ -337,7 +506,10 @@ class TuckerPlan:
                 "record=True needs the eager per-step runner, which sharded "
                 "plans do not have (the shard_map sweep is one program); "
                 "collect sharded measurements via sthosvd_distributed")
-        core, factors = self._sweep(batched=False)(self._place_input(x))
+        donate_now = self._resolve_donate(created=x is not xin,
+                                          override=donate)
+        core, factors = self._sweep(batched=False, donate=donate_now)(
+            self._place_input(x))
         return SthosvdResult(
             tucker=TuckerTensor(core=core, factors=list(factors)),
             trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
@@ -400,13 +572,19 @@ class TuckerPlan:
             tucker=TuckerTensor(core=core, factors=factors),
             trace=trace, select_overhead_s=0.0)
 
-    def execute_batch(self, xs: jax.Array) -> list[SthosvdResult]:
+    def execute_batch(self, xs: jax.Array, *,
+                      donate: bool | None = None) -> list[SthosvdResult]:
         """Decompose a fleet of same-shaped tensors (leading batch axis) with
         one vmapped program; returns one result per batch element.
 
         Sharded plans run the fleet item by item instead (shard_map
         schedules don't vmap) — each item still reuses the one cached
-        compiled sweep, so the fleet pays a single compilation."""
+        compiled sweep, so the fleet pays a single compilation.
+
+        ``donate`` behaves as in :meth:`execute`, applied to the whole
+        stacked batch buffer (donating a fleet an engine stacked itself is
+        free memory back)."""
+        xin = xs
         xs = jnp.asarray(xs)
         if tuple(xs.shape[1:]) != self.shape:
             raise ValueError(
@@ -415,7 +593,9 @@ class TuckerPlan:
             raise ValueError(f"plan is for dtype {self.dtype}, got {xs.dtype}")
         if self.backend == "sharded":
             return [self.execute(xs[b]) for b in range(xs.shape[0])]
-        cores, factors = self._sweep(batched=True)(xs)
+        donate_now = self._resolve_donate(created=xs is not xin,
+                                          override=donate)
+        cores, factors = self._sweep(batched=True, donate=donate_now)(xs)
         out = []
         for b in range(xs.shape[0]):
             out.append(SthosvdResult(
@@ -428,6 +608,43 @@ class TuckerPlan:
         return out
 
     __call__ = execute
+
+    # -- reporting -----------------------------------------------------------
+    def describe(self) -> str:
+        """Human-readable plan report: the frozen schedule in execution
+        order with modeled cost and per-device peak per step, plus the
+        totals, donation policy, and memory cap the plan was built under."""
+        cfg = self.config
+        cap = cfg.memory_cap_bytes
+        lines = [
+            f"TuckerPlan {self.shape} {self.dtype} -> ranks {cfg.ranks} "
+            f"[{cfg.variant}, backend={self.backend}]",
+            f"  mode_order={cfg.mode_order!r}  "
+            f"memory_cap_bytes={cap if cap is not None else 'uncapped'}  "
+            f"donate_input={'auto' if cfg.donate_input is None else cfg.donate_input}"
+            + (" (resolves: donated for host inputs; a caller-held jax "
+               "array is kept)" if self.donates and cfg.donate_input is None
+               else f" (resolves: {'donated' if self.donates else 'undonated'})"),
+        ]
+        per_dev = any(s.n_shards > 1 for s in self.schedule)
+        for k, s in enumerate(self.schedule):
+            pred = f"  pred={s.predicted_s * 1e3:.3f}ms" if s.predicted_s \
+                else ""
+            shard = f"  shard_mode={s.shard_mode}/{s.n_shards}" \
+                if per_dev else ""
+            lines.append(
+                f"  step {k}: mode {s.mode} {s.method:>3s}  "
+                f"I={s.i_n} R={s.r_n} J={s.j_n}  "
+                f"flops={s.flops:.3g}  peak={s.peak_bytes:,}B{shard}{pred}")
+        total_pred = self.total_predicted_s
+        lines.append(
+            f"  total: flops={self.total_flops:.3g}  "
+            f"peak={self.peak_bytes:,}B"
+            + (" (per device)" if per_dev else "")
+            + (f"  predicted={total_pred * 1e3:.3f}ms" if total_pred else "")
+            + (f"  cap_headroom={cap - self.peak_bytes:,}B"
+               if cap is not None else ""))
+        return "\n".join(lines)
 
     # -- persistence (mirrors Selector.save) ---------------------------------
     def to_dict(self) -> dict:
@@ -505,10 +722,24 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
         als_iters=config.als_iters, hooi_iters=config.hooi_iters,
         itemsize=compute_dtype.itemsize, backend=backend.name,
         n_shards=config.n_shards if backend.requires_mesh else 1,
-        cost_model=cost_model)
-    return TuckerPlan(shape=shape, dtype=str(dtype), config=config,
-                      schedule=schedule,
-                      select_seconds=timed.seconds if timed else 0.0)
+        cost_model=cost_model, memory_cap_bytes=config.memory_cap_bytes)
+    p = TuckerPlan(shape=shape, dtype=str(dtype), config=config,
+                   schedule=schedule,
+                   select_seconds=timed.seconds if timed else 0.0)
+    if config.memory_cap_bytes is not None and \
+            p.peak_bytes > config.memory_cap_bytes:
+        # every step fits, but the plan-level (donation-aware) peak does
+        # not: an undonated sweep keeps the dead input copy live through
+        # steps 1..N-1 on top of each step's working set
+        from .schedule_opt import MemoryCapError
+        raise MemoryCapError(
+            f"schedule fits memory_cap_bytes={config.memory_cap_bytes:,} "
+            f"per step, but the undonated sweep's modeled peak is "
+            f"{p.peak_bytes:,} bytes — the caller-held input copy "
+            f"({p.input_bytes:,} bytes) rides on every step after the "
+            "first; enable donation (donate_input=True or the default "
+            "auto policy with host inputs) or raise the cap")
+    return p
 
 
 def decompose(x: jax.Array, config: TuckerConfig, *,

@@ -191,9 +191,16 @@ def sthosvd_distributed(
     methods: str = "eig",
     als_iters: int = DEFAULT_ALS_ITERS,
     selector=None,
+    mode_order=None,
+    memory_cap_bytes: int | None = None,
     block_until_ready: bool = True,
 ) -> SthosvdResult:
     """Distributed flexible st-HOSVD.  ``methods``: 'eig' | 'als' | 'auto'.
+
+    ``mode_order="opt"`` runs the subset-DP schedule search against the
+    PER-DEVICE peak model (shard participation per state follows
+    :func:`pick_shard_mode`); ``memory_cap_bytes`` is the per-device cap —
+    the regime where sharding decides whether a mode fits at all.
 
     Thin wrapper over the shared plan machinery: the per-mode solver AND
     shard-mode schedule is resolved ahead of time
@@ -213,8 +220,9 @@ def sthosvd_distributed(
         selector = timed = TimedSelector(selector)
     schedule = resolve_schedule(
         x.shape, ranks, variant="sthosvd", methods=methods, selector=selector,
-        als_iters=als_iters, itemsize=x.dtype.itemsize, backend="sharded",
-        n_shards=mesh.shape[axis])
+        mode_order=mode_order, als_iters=als_iters,
+        itemsize=x.dtype.itemsize, backend="sharded",
+        n_shards=mesh.shape[axis], memory_cap_bytes=memory_cap_bytes)
 
     y, factors, seconds = run_sharded_schedule(
         x, schedule, mesh, axis, als_iters=als_iters,

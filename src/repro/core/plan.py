@@ -110,6 +110,10 @@ def resolve_mode_order(shape: Sequence[int], ranks: Sequence[int],
     n = len(shape)
     if mode_order is None:
         return list(range(n))
+    if mode_order == "opt":
+        raise ValueError("mode_order='opt' is resolved by resolve_schedule "
+                         "(the DP search needs solver costs and the memory "
+                         "cap), not by resolve_mode_order")
     if mode_order == "shrink":
         return sorted(range(n), key=lambda m: ranks[m] / shape[m])
     order = [int(m) for m in mode_order]
@@ -223,6 +227,7 @@ def resolve_schedule(
     backend: str = "matfree",
     n_shards: int = 1,
     cost_model=None,
+    memory_cap_bytes: int | None = None,
 ) -> tuple[ModeStep, ...]:
     """Resolve the full per-mode solver schedule ahead of execution.
 
@@ -247,6 +252,19 @@ def resolve_schedule(
     CALIBRATED (``repro.tune.calibrate``); the textbook model carries no
     seconds unit, so uncalibrated schedules record 0.0.  When a selector is
     auto-resolved here, its embedded cost model is used.
+
+    ``mode_order="opt"`` (st-HOSVD and the HOOI init sweep) runs the exact
+    subset DP of :mod:`repro.core.schedule_opt`, jointly choosing mode order
+    AND per-step solver (respecting pinned ``methods``) to minimize the cost
+    model's predicted total — seconds when calibrated, Eq. 4/5 FLOPs
+    otherwise — subject to ``memory_cap_bytes``.
+
+    ``memory_cap_bytes`` is a hard per-device ceiling on every step's
+    modeled ``peak_bytes``: fixed-order schedules that exceed it (and
+    ``"opt"`` searches that cannot fit under it) raise
+    :class:`repro.core.schedule_opt.MemoryCapError` at plan time, naming
+    the binding step — the paper's OOM regime fails before the first byte
+    is allocated, and a tight cap can force the slower-but-smaller solver.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
@@ -271,6 +289,15 @@ def resolve_schedule(
     def method_for(mode):
         return None if fixed is None else fixed[mode]
 
+    def _capped(steps_t: tuple[ModeStep, ...]) -> tuple[ModeStep, ...]:
+        # hard plan-time cap: "opt" schedules were searched under it, but the
+        # check runs uniformly so fixed orders (and HOOI refinements, which
+        # the DP does not reorder) fail loudly too
+        if memory_cap_bytes is not None:
+            from .schedule_opt import validate_schedule_cap
+            validate_schedule_cap(steps_t, memory_cap_bytes)
+        return steps_t
+
     steps: list[ModeStep] = []
     if variant == "thosvd":
         if mode_order is not None:
@@ -284,25 +311,37 @@ def resolve_schedule(
                                     i_n, r_n, size // i_n, als_iters,
                                     itemsize, backend,
                                     cost_model=cost_model))
-        return tuple(steps)
+        return _capped(tuple(steps))
 
     # st-HOSVD sweep (also HOOI's init): the tensor shrinks between steps
     if variant == "sthosvd" or include_init:
         if n_shards > 1:
             from .distributed import pick_shard_mode
+        if mode_order == "opt":
+            from .schedule_opt import optimize_schedule
+            search = optimize_schedule(
+                shape, ranks, methods=fixed, als_iters=als_iters,
+                itemsize=itemsize, n_shards=n_shards, cost_model=cost_model,
+                memory_cap_bytes=memory_cap_bytes)
+            order, opt_methods = list(search.order), list(search.methods)
+        else:
+            order = resolve_mode_order(shape, ranks, mode_order)
+            opt_methods = None
         cur = list(shape)
-        for mode in resolve_mode_order(shape, ranks, mode_order):
+        for k, mode in enumerate(order):
             i_n, r_n = cur[mode], ranks[mode]
             j_n = math.prod(cur) // i_n
             shard = pick_shard_mode(tuple(cur), mode, n_shards) \
                 if n_shards > 1 else None
-            steps.append(_make_step(mode, method_for(mode), selector,
+            method = opt_methods[k] if opt_methods is not None \
+                else method_for(mode)
+            steps.append(_make_step(mode, method, selector,
                                     i_n, r_n, j_n, als_iters, itemsize,
                                     backend, n_shards, shard,
                                     cost_model=cost_model))
             cur[mode] = r_n
     if variant == "sthosvd":
-        return tuple(steps)
+        return _capped(tuple(steps))
 
     # HOOI refinement sweeps: mode n sees x projected on all OTHER factors,
     # i.e. shape (R_0 .. I_n .. R_{N-1}) — static, so resolvable up front.
@@ -314,7 +353,7 @@ def resolve_schedule(
             steps.append(_make_step(mode, method_for(mode), selector,
                                     i_n, r_n, j_n, als_iters, itemsize,
                                     backend, cost_model=cost_model))
-    return tuple(steps)
+    return _capped(tuple(steps))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,234 @@
+"""Plan-time schedule search: DP-optimal mode order + solver choice under a
+memory cap (ROADMAP "Plan-aware memory"; the paper's GPU OOM regime).
+
+st-HOSVD cost is dominated by the order modes are processed in — shrinking a
+high-compression mode first collapses J_n for every later step — and the key
+structural fact is that the (I_n, R_n, J_n) triple a mode sees depends only
+on the *set* of modes already processed, not on their sequence.  That makes
+the search space a lattice of 2^N subsets instead of N! sequences, so an
+exact Held–Karp-style DP is cheap for any realistic tensor order:
+
+  state    = subset S of already-shrunk modes
+  value(S) = min total predicted cost of reaching S
+  edge     = processing mode m ∉ S with solver q, priced by the (possibly
+             calibrated) :class:`~repro.core.cost_model.CostModel` —
+             predicted seconds when calibrated, Eq. 4/5 FLOPs otherwise —
+             and gated by ``memory_cap_bytes`` against the same per-device
+             ``_step_peak_bytes`` model the plan layer stamps on every step.
+
+The DP jointly picks the mode ORDER and the per-step SOLVER: a cap below
+EIG's I_n² Gram scratch can force the slower-but-smaller ALS iterate (or
+vice versa — ALS's fp32 input cast can be the binding buffer for sub-fp32
+inputs), exactly the trade the paper's OOM regime demands.  For sharded
+plans the per-state shard participation follows
+:func:`~repro.core.distributed.pick_shard_mode` on the state's shrunken
+shape, so different orders genuinely see different per-device peaks — the
+DP searches over shard participation implicitly through the order.
+
+Entry points:
+
+  * :func:`optimize_schedule` — the DP; returns the optimal order + per-step
+    methods + predicted total.  Raises :class:`MemoryCapError` naming the
+    binding step when no complete schedule fits the cap.
+  * :func:`validate_schedule_cap` — post-hoc cap check for schedules whose
+    order was fixed by the caller (explicit ``mode_order``, t-HOSVD, HOOI
+    refinement sweeps); same error contract.
+
+Used by :func:`repro.core.plan.resolve_schedule` when
+``mode_order="opt"`` / ``memory_cap_bytes`` flow in from ``TuckerConfig``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+from .cost_model import DEFAULT_COST_MODEL, CostModel
+from .solvers import DEFAULT_ALS_ITERS
+
+#: solvers the optimizer may choose between when methods are not pinned.
+#: SVD is deliberately excluded — it is never the predicted-best solver and
+#: always matricizes (plan it explicitly if you want the baseline).
+SEARCH_METHODS = ("eig", "als")
+
+
+class MemoryCapError(ValueError):
+    """No schedule satisfies ``memory_cap_bytes``; the message names the
+    binding step (mode, solver, problem size, modeled bytes)."""
+
+
+@dataclass(frozen=True)
+class ScheduleSearch:
+    """Result of the subset DP: the optimal order, the solver chosen for
+    each position of that order, the predicted total cost (seconds for a
+    calibrated cost model, FLOPs otherwise), and how many lattice states
+    were expanded (diagnostics / tune harvesting)."""
+    order: tuple[int, ...]
+    methods: tuple[str, ...]        # per position of ``order``
+    total_cost: float
+    calibrated: bool                # total_cost is seconds, not FLOPs
+    n_states: int
+
+    def to_dict(self) -> dict:
+        return {"order": list(self.order), "methods": list(self.methods),
+                "total_cost": self.total_cost, "calibrated": self.calibrated,
+                "n_states": self.n_states}
+
+
+def _candidates(methods, mode: int) -> tuple[str, ...]:
+    """Solver candidates for ``mode``: the pinned one, or the search set."""
+    if methods is None:
+        return SEARCH_METHODS
+    return (methods[mode],)
+
+
+def _priced_candidates(shape, ranks, methods, itemsize, n_shards, cur, m):
+    """Every (method, peak_bytes, i_n, r_n, j_n) candidate for solving mode
+    ``m`` at the DP state whose current (partially shrunk) dims are ``cur``
+    — the ONE place the shard-participation and per-device peak rules live,
+    shared by the DP transition loop and the infeasibility message."""
+    from .plan import _step_peak_bytes   # shared model; plan.py imports us
+    i_n, r_n = shape[m], ranks[m]        # lazily, so no cycle
+    j_n = math.prod(cur) // i_n
+    if n_shards > 1:
+        from .distributed import pick_shard_mode
+        shard = pick_shard_mode(tuple(cur), m, n_shards)
+    else:
+        shard = None
+    for meth in _candidates(methods, m):
+        eff = n_shards if (shard is not None and meth != "svd") else 1
+        yield meth, _step_peak_bytes(meth, i_n, r_n, j_n, itemsize, eff), \
+            i_n, r_n, j_n
+
+
+def step_cost(cost_model: CostModel, method: str, i_n: int, r_n: int,
+              j_n: int, als_iters: int) -> float:
+    """The DP's edge weight: MARGINAL predicted seconds — the calibrated
+    per-FLOP scales times Eq. 4/5, WITHOUT the fitted per-solve dispatch
+    overheads.  Every complete schedule runs exactly N solves, so the
+    overhead term is a constant offset that cannot change the argmin over
+    orders — but it was fitted on eager per-solve dispatch, which the fused
+    compiled sweep the optimizer is scheduling never pays, and keeping it
+    would bias the solver choice toward the low-overhead solver (EIG) far
+    beyond its in-sweep advantage.  With textbook scales (1.0) this
+    degrades to a plain FLOP count, pricing the uncalibrated regime."""
+    if method == "eig":
+        return cost_model.eig_scale * cost_model.eig_flops(i_n, r_n, j_n)
+    if method == "als":
+        return cost_model.als_scale * \
+            cost_model.als_flops(i_n, r_n, j_n, als_iters)
+    # svd has no fitted scale; eig's per-FLOP seconds are the closest GEMM
+    # proxy (same convention as CostModel.predict_seconds) — svd only enters
+    # the search when explicitly pinned, so the bias cannot flip a solver
+    # choice, only shade the order of a schedule that already chose svd
+    return cost_model.eig_scale * cost_model.svd_flops(i_n, r_n, j_n)
+
+
+def optimize_schedule(
+    shape: Sequence[int],
+    ranks: Sequence[int],
+    *,
+    methods: Sequence[str] | None = None,
+    als_iters: int = DEFAULT_ALS_ITERS,
+    itemsize: int = 4,
+    n_shards: int = 1,
+    cost_model: CostModel | None = None,
+    memory_cap_bytes: int | None = None,
+) -> ScheduleSearch:
+    """Exact subset DP over st-HOSVD schedules.
+
+    ``methods`` pins the solver per MODE (the DP then only searches order);
+    ``None`` lets each step choose from :data:`SEARCH_METHODS`.  With
+    ``n_shards > 1`` every candidate step's peak is the per-device figure
+    for the shard mode :func:`pick_shard_mode` assigns at that state.
+
+    Raises :class:`MemoryCapError` when no complete order fits the cap; the
+    message names the cheapest-memory step that still exceeds it at the
+    deepest reachable state (the *binding* step).
+    """
+    shape = tuple(int(s) for s in shape)
+    ranks = tuple(int(r) for r in ranks)
+    n = len(shape)
+    cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
+    full = (1 << n) - 1
+
+    # best[mask] = (cost, prev_mask, mode, method); transitions only ever
+    # set bits, so ascending-mask iteration is a valid topological order.
+    best: dict[int, tuple[float, int, int, str]] = {0: (0.0, -1, -1, "")}
+    for mask in range(full):
+        state = best.get(mask)
+        if state is None:
+            continue
+        cur = [ranks[i] if mask >> i & 1 else shape[i] for i in range(n)]
+        for m in range(n):
+            if mask >> m & 1:
+                continue
+            for meth, peak, i_n, r_n, j_n in _priced_candidates(
+                    shape, ranks, methods, itemsize, n_shards, cur, m):
+                if memory_cap_bytes is not None and peak > memory_cap_bytes:
+                    continue
+                cost = state[0] + step_cost(cm, meth, i_n, r_n, j_n, als_iters)
+                nxt = mask | (1 << m)
+                if nxt not in best or cost < best[nxt][0]:
+                    best[nxt] = (cost, mask, m, meth)
+
+    if full not in best:
+        raise MemoryCapError(_infeasible_message(
+            shape, ranks, methods, als_iters, itemsize, n_shards,
+            memory_cap_bytes, best))
+
+    order: list[int] = []
+    meths: list[str] = []
+    mask = full
+    while mask:
+        _, prev, m, meth = best[mask]
+        order.append(m)
+        meths.append(meth)
+        mask = prev
+    order.reverse()
+    meths.reverse()
+    return ScheduleSearch(order=tuple(order), methods=tuple(meths),
+                          total_cost=best[full][0],
+                          calibrated=cm.calibrated, n_states=len(best))
+
+
+def _infeasible_message(shape, ranks, methods, als_iters, itemsize, n_shards,
+                        cap, best) -> str:
+    """Name the binding step: at the deepest reachable state, the remaining
+    mode whose cheapest-memory solver still exceeds the cap by the least —
+    the step any schedule must eventually pay."""
+    n = len(shape)
+    deepest = max(best, key=lambda mask: bin(mask).count("1"))
+    cur = [ranks[i] if deepest >> i & 1 else shape[i] for i in range(n)]
+    done = [i for i in range(n) if deepest >> i & 1]
+    binding = None   # (peak, mode, method, i, r, j)
+    for m in range(n):
+        if deepest >> m & 1:
+            continue
+        for meth, peak, i_n, r_n, j_n in _priced_candidates(
+                shape, ranks, methods, itemsize, n_shards, cur, m):
+            if binding is None or peak < binding[0]:
+                binding = (peak, m, meth, i_n, r_n, j_n)
+    peak, m, meth, i_n, r_n, j_n = binding
+    dev = " per device" if n_shards > 1 else ""
+    after = f"after shrinking modes {done}, " if done else ""
+    return (f"memory_cap_bytes={cap:,} is infeasible for shape {shape} → "
+            f"ranks {ranks}: {after}the binding step — mode {m} "
+            f"({meth}, I={i_n} R={r_n} J={j_n}) — still needs "
+            f"≥{peak:,} modeled bytes{dev}; raise the cap above that, "
+            "shrink the ranks, or shard over more devices")
+
+
+def validate_schedule_cap(steps, memory_cap_bytes: int) -> None:
+    """Post-hoc cap check for fixed-order schedules (explicit ``mode_order``,
+    t-HOSVD, HOOI refinements): every step's modeled per-device peak must fit.
+    Raises :class:`MemoryCapError` naming the first binding step."""
+    for k, s in enumerate(steps):
+        if s.peak_bytes > memory_cap_bytes:
+            dev = " per device" if s.n_shards > 1 else ""
+            raise MemoryCapError(
+                f"schedule exceeds memory_cap_bytes={memory_cap_bytes:,}: "
+                f"step {k} (mode {s.mode}, {s.method}, I={s.i_n} R={s.r_n} "
+                f"J={s.j_n}) models {s.peak_bytes:,} peak bytes{dev}; "
+                "mode_order='opt' searches order AND solver under the cap")

@@ -58,6 +58,10 @@ def als_solve(y: jax.Array, mode: int, rank: int, *,
               num_iters: int = DEFAULT_ALS_ITERS,
               seed: int = 0,
               impl: str = "matfree") -> SolveResult:
+    if num_iters < 1:
+        # the loop must run at least once: the R-tensor carry is only
+        # written inside the body (zero iterations would return a zero core)
+        raise ValueError(f"als_solve needs num_iters >= 1, got {num_iters}")
     ttm, gram, ttt = backend_ops(impl)
     i_n = y.shape[mode]
     # sub-fp32 inputs (bf16/fp16) iterate in fp32 (the peak_bytes model in
@@ -68,7 +72,8 @@ def als_solve(y: jax.Array, mode: int, rank: int, *,
 
     yc = y.astype(cdtype)
 
-    def body(_, l):
+    def body(_, carry):
+        l, _ = carry
         # R_k ← (Y_(n)^T L)(L^T L)^{-1}; tensorized: R-tensor = TTM(y, L^T, n) ×_n (LᵀL)^{-1}
         r_t = ttm(yc, l.T, mode)
         ltl = jnp.dot(l.T, l, precision=jax.lax.Precision.HIGHEST)
@@ -76,13 +81,18 @@ def als_solve(y: jax.Array, mode: int, rank: int, *,
         # L_{k+1} ← (Y_(n) R)(RᵀR)^{-1};  Y_(n) R = TTT(y, R-tensor, n)
         yr = ttt(yc, r_t, mode)                          # (I_n, R_n)
         rtr = gram(r_t, mode)                            # (R_n, R_n)
-        return jnp.dot(yr, _spd_inverse(rtr), precision=jax.lax.Precision.HIGHEST)
+        l_new = jnp.dot(yr, _spd_inverse(rtr),
+                        precision=jax.lax.Precision.HIGHEST)
+        return l_new, r_t
 
-    l = jax.lax.fori_loop(0, num_iters, body, l0)
-    # final R-tensor for the converged L
-    r_t = ttm(yc, l.T, mode)
-    ltl = jnp.dot(l.T, l, precision=jax.lax.Precision.HIGHEST)
-    r_t = ttm(r_t, _spd_inverse(ltl), mode)
+    # carrying the R-tensor out of the loop skips the closing "recompute R
+    # for the final L" (one extra TTM + Cholesky solve per solve): the loop
+    # exits with (L_k, R_{k-1}), a consistent ALS pair — L_k is the exact LS
+    # optimum FOR R_{k-1} — so the sweep ends on an L-update instead of
+    # paying an extra R-update of negligible accuracy benefit.
+    r_shape = y.shape[:mode] + (rank,) + y.shape[mode + 1:]
+    l, r_t = jax.lax.fori_loop(
+        0, num_iters, body, (l0, jnp.zeros(r_shape, cdtype)))
     # orthonormalize:  L = Q̂ R̂,  U ← Q̂,  core ← TTM(R-tensor, R̂)
     q, rhat = jnp.linalg.qr(l)
     y_new = ttm(r_t, rhat, mode).astype(y.dtype)

@@ -66,6 +66,14 @@ class ModeTrace:
                                # model (0.0 = uncalibrated) — compare with
                                # ``seconds`` for predicted-vs-actual drift
 
+    @property
+    def delta_s(self) -> float:
+        """Predicted-vs-actual drift: ``seconds - predicted_s`` (positive =
+        slower than the calibrated model expected).  Only meaningful when
+        both sides are real — a fused sweep has no per-step ``seconds`` and
+        an uncalibrated plan no ``predicted_s``."""
+        return self.seconds - self.predicted_s
+
 
 @dataclass
 class SthosvdResult:
@@ -77,6 +85,30 @@ class SthosvdResult:
     def methods(self) -> tuple[str, ...]:
         return tuple(t.method for t in sorted(self.trace, key=lambda t: t.mode))
 
+    def report(self) -> str:
+        """Per-step execution report in schedule order: solver, problem
+        size, measured seconds, and — when a calibrated cost model priced
+        the plan — predicted seconds and the drift, so order-search wins
+        (and calibration rot) are visible in traces, not just benches."""
+        predicted = any(t.predicted_s for t in self.trace)
+        head = "step  mode method backend    I     R     J    seconds"
+        if predicted:
+            head += "  predicted    delta"
+        lines = [head]
+        for k, t in enumerate(self.trace):
+            row = (f"{k:>4}  {t.mode:>4} {t.method:>6} {t.backend:>8} "
+                   f"{t.i_n:>5} {t.r_n:>5} {t.j_n:>5} {t.seconds:>9.4f}")
+            if predicted:
+                row += f" {t.predicted_s:>10.4f} {t.delta_s:>+8.4f}"
+            lines.append(row)
+        total_s = sum(t.seconds for t in self.trace)
+        total = f"total{'':>38}{total_s:>9.4f}"
+        if predicted:
+            total_p = sum(t.predicted_s for t in self.trace)
+            total += f" {total_p:>10.4f} {total_s - total_p:>+8.4f}"
+        lines.append(total)
+        return "\n".join(lines)
+
 
 def sthosvd(
     x: jax.Array,
@@ -84,16 +116,23 @@ def sthosvd(
     methods: str | Sequence[str] = "auto",
     *,
     selector: Callable[..., str] | None = None,
-    mode_order: Sequence[int] | None = None,
+    mode_order: Sequence[int] | str | None = None,
     als_iters: int = DEFAULT_ALS_ITERS,
     impl: str = "matfree",
+    memory_cap_bytes: int | None = None,
     block_until_ready: bool = False,
 ) -> SthosvdResult:
     """Flexible st-HOSVD (Alg. 2).  Returns factors, core, per-mode trace.
 
     ``mode_order`` defaults to the paper's 1..N sweep; adaptive shrink-ratio
     ordering (beyond-paper, DESIGN.md §9.3) is available via
-    ``mode_order="shrink"``.
+    ``mode_order="shrink"``, and the exact DP schedule search (order AND
+    per-step solver, optionally under ``memory_cap_bytes``) via
+    ``mode_order="opt"`` (see :mod:`repro.core.schedule_opt`).
+
+    ``memory_cap_bytes`` is the hard plan-time ceiling on each step's
+    modeled peak working set; infeasible schedules raise ``MemoryCapError``
+    naming the binding step before anything is allocated.
 
     ``impl`` names an ops backend (``matfree`` | ``explicit`` | ``pallas`` |
     custom-registered) or ``"auto"`` for the platform default.
@@ -111,7 +150,8 @@ def sthosvd(
     schedule = resolve_schedule(
         x.shape, ranks, variant="sthosvd", methods=methods,
         mode_order=mode_order, selector=selector, als_iters=als_iters,
-        itemsize=x.dtype.itemsize, backend=backend.name)
+        itemsize=x.dtype.itemsize, backend=backend.name,
+        memory_cap_bytes=memory_cap_bytes)
 
     core, factors, seconds = run_schedule(
         x, schedule, sequential=True, als_iters=als_iters,

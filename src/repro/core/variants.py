@@ -40,15 +40,20 @@ def _auto_selector(methods, selector):
 
 def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
            selector=None, als_iters: int = DEFAULT_ALS_ITERS,
-           impl: str = "matfree",
+           impl: str = "matfree", memory_cap_bytes: int | None = None,
            block_until_ready: bool = False) -> SthosvdResult:
-    """Truncated HOSVD: factors from the original tensor, one projection."""
+    """Truncated HOSVD: factors from the original tensor, one projection.
+
+    ``memory_cap_bytes`` fails the plan loudly when any mode solve's modeled
+    peak exceeds it — t-HOSVD has no order freedom, so the cap can only be
+    met by a smaller solver (or not at all)."""
     backend = resolve_backend(impl, dtype=x.dtype)
     timed = _auto_selector(methods, selector)
     schedule = resolve_schedule(
         x.shape, ranks, variant="thosvd", methods=methods,
         selector=timed or selector, als_iters=als_iters,
-        itemsize=x.dtype.itemsize, backend=backend.name)
+        itemsize=x.dtype.itemsize, backend=backend.name,
+        memory_cap_bytes=memory_cap_bytes)
     _, factors, seconds = run_schedule(
         x, schedule, sequential=False, als_iters=als_iters,
         block_until_ready=block_until_ready)
@@ -65,26 +70,35 @@ def thosvd(x: jax.Array, ranks, methods: str = "auto", *,
 
 def hooi(x: jax.Array, ranks, *, n_iters: int = 3, methods: str = "auto",
          selector=None, als_iters: int = DEFAULT_ALS_ITERS,
-         impl: str = "matfree", block_until_ready: bool = False,
+         impl: str = "matfree", mode_order=None,
+         memory_cap_bytes: int | None = None,
+         block_until_ready: bool = False,
          init: SthosvdResult | None = None) -> SthosvdResult:
     """Higher-order orthogonal iteration, st-HOSVD-initialized.
 
     Per sweep and mode: project x on all OTHER factors, then solve the mode
     with the flexible (selector-driven) solver.  Error is non-increasing in
     exact arithmetic; typically converges in 2–5 sweeps.
+
+    ``mode_order`` (incl. ``"shrink"``/``"opt"``) orders the st-HOSVD INIT
+    sweep — refinement sweeps always cycle 0..N-1; ``memory_cap_bytes``
+    caps every step (init and refinements) at plan time.
     """
     backend = resolve_backend(impl, dtype=x.dtype)
     timed = _auto_selector(methods, selector)
     base = init or sthosvd(x, ranks, methods=methods,
                            selector=timed or selector, als_iters=als_iters,
-                           impl=impl, block_until_ready=block_until_ready)
+                           impl=impl, mode_order=mode_order,
+                           memory_cap_bytes=memory_cap_bytes,
+                           block_until_ready=block_until_ready)
     factors = list(base.tucker.factors)
     trace = list(base.trace)
 
     schedule = resolve_schedule(
         x.shape, ranks, variant="hooi", methods=methods,
         selector=timed or selector, als_iters=als_iters, hooi_iters=n_iters,
-        include_init=False, itemsize=x.dtype.itemsize, backend=backend.name)
+        include_init=False, itemsize=x.dtype.itemsize, backend=backend.name,
+        memory_cap_bytes=memory_cap_bytes)
     for step in schedule:
         y = x
         for m, u in enumerate(factors):

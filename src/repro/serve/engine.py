@@ -163,14 +163,26 @@ class TuckerBatchEngine:
     rejects the contradictory combination.  Sharded groups still batch
     planning and compilation — ``execute_batch`` runs them item by item
     over one cached compiled sweep.
+
+    ``memory_cap_bytes`` pins a per-device modeled-peak ceiling onto every
+    plan the engine builds (requests carrying their own cap keep the
+    tighter of the two) — the fleet-operator knob for the paper's OOM
+    regime; pair it with per-request ``mode_order="opt"`` configs to let
+    the DP search schedules under it.
+
+    Batched waves donate their stacked input buffer into the vmapped sweep
+    (the engine built the stack, so no caller array is ever invalidated);
+    request tensors themselves are never donated.
     """
 
     def __init__(self, selector=None, *, impl: str | None = None,
-                 mesh=None, shard_axis: str | None = None):
+                 mesh=None, shard_axis: str | None = None,
+                 memory_cap_bytes: int | None = None):
         self._selector = selector
         self._impl = "sharded" if impl is None and mesh is not None else impl
         self._mesh = mesh
         self._shard_axis = shard_axis
+        self._cap = memory_cap_bytes
         self._plans: dict[tuple, TuckerPlan] = {}
         self.stats = {"plans_built": 0, "requests": 0, "batches": 0,
                       "backends": {}}
@@ -184,8 +196,14 @@ class TuckerBatchEngine:
             mesh, axis = self._mesh, self._shard_axis or config.shard_axis
         if impl != "auto" and not get_backend(impl).requires_mesh:
             mesh = None   # pinned single-device backend: a mesh is moot
-        if (impl, mesh, axis) != (config.impl, config.mesh, config.shard_axis):
-            config = replace(config, impl=impl, mesh=mesh, shard_axis=axis)
+        cap = config.memory_cap_bytes
+        if self._cap is not None:
+            cap = self._cap if cap is None else min(cap, self._cap)
+        if (impl, mesh, axis, cap) != (config.impl, config.mesh,
+                                       config.shard_axis,
+                                       config.memory_cap_bytes):
+            config = replace(config, impl=impl, mesh=mesh, shard_axis=axis,
+                             memory_cap_bytes=cap)
         return config
 
     def plan_for(self, shape, dtype, config: TuckerConfig) -> TuckerPlan:
@@ -211,8 +229,11 @@ class TuckerBatchEngine:
             if len(grp) == 1:
                 grp[0].result = p.execute(jnp.asarray(grp[0].x))
             else:
+                # the stack is engine-built scratch: donate it into the
+                # vmapped sweep so the wave's dead copy is returned to XLA
+                # (plan-level guards still veto unsupported backends)
                 xs = jnp.stack([jnp.asarray(r.x) for r in grp])
-                for r, res in zip(grp, p.execute_batch(xs)):
+                for r, res in zip(grp, p.execute_batch(xs, donate=True)):
                     r.result = res
             self.stats["requests"] += len(grp)
             self.stats["batches"] += 1

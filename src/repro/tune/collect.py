@@ -223,6 +223,12 @@ def measurements_from_traces(traces, *, platform: str, dtype: str,
     jitted sweep, where per-step time is unobservable) and non-EIG/ALS
     solves are skipped: only rows a trainer can label against belong in
     the store.
+
+    Each row carries the trace's plan-time ``predicted_s`` (when a
+    calibrated cost model priced the schedule), so decisions made by the
+    schedule optimizer — which solver the DP picked and what it believed
+    the step would cost — become auditable records the flywheel can check
+    for drift (``python -m repro.tune report``).
     """
     device = device_fingerprint()
     out = []
@@ -233,7 +239,8 @@ def measurements_from_traces(traces, *, platform: str, dtype: str,
             platform=platform, backend=t.backend, device=device,
             i_n=t.i_n, r_n=t.r_n, j_n=t.j_n, method=t.method,
             seconds=float(t.seconds), dtype=dtype, order=order,
-            als_iters=als_iters, source=HARVEST))
+            als_iters=als_iters, source=HARVEST,
+            predicted_s=float(getattr(t, "predicted_s", 0.0))))
     return out
 
 

@@ -56,6 +56,10 @@ class Measurement:
     order: int = 3           # tensor order the (I_n, J_n) pair came from
     als_iters: int = 5       # ALS iteration count (ignored for eig/svd)
     source: str = COLLECT    # "collect" | "harvest"
+    predicted_s: float = 0.0  # plan-time calibrated prediction the schedule
+                              # optimizer priced this step at (0.0 = none) —
+                              # harvested records make DP decisions auditable
+                              # and expose calibration drift (see `report`)
 
     def key(self) -> tuple:
         """Dedup/merge identity: everything but (seconds, source)."""
@@ -82,7 +86,8 @@ class Measurement:
                    dtype=str(d.get("dtype", "float32")),
                    order=int(d.get("order", 3)),
                    als_iters=int(d.get("als_iters", 5)),
-                   source=str(d.get("source", COLLECT)))
+                   source=str(d.get("source", COLLECT)),
+                   predicted_s=float(d.get("predicted_s", 0.0)))
 
 
 class RecordStore:
@@ -197,21 +202,33 @@ class RecordStore:
         return h.hexdigest()
 
     def stats(self) -> dict:
-        """Summary counts for ``python -m repro.tune report``."""
+        """Summary counts for ``python -m repro.tune report``, plus
+        predicted-vs-actual drift over harvested rows that carry a
+        calibrated plan-time prediction — the health signal for the
+        schedule optimizer's cost model."""
         strata: dict[str, int] = {}
         methods: dict[str, int] = {}
         sources: dict[str, int] = {}
         n = 0
+        drift_n, drift_sum = 0, 0.0
         for m in self:
             n += 1
             strata_key = f"{m.platform}/{m.backend}"
             strata[strata_key] = strata.get(strata_key, 0) + 1
             methods[m.method] = methods.get(m.method, 0) + 1
             sources[m.source] = sources.get(m.source, 0) + 1
-        return {"path": str(self.path), "records": n,
-                "unique": len(self.dedup()), "strata": strata,
-                "methods": methods, "sources": sources,
-                "digest": self.digest() if n else None}
+            if m.predicted_s > 0.0 and m.seconds > 0.0:
+                drift_n += 1
+                drift_sum += abs(m.seconds - m.predicted_s) / m.seconds
+        out = {"path": str(self.path), "records": n,
+               "unique": len(self.dedup()), "strata": strata,
+               "methods": methods, "sources": sources,
+               "digest": self.digest() if n else None}
+        if drift_n:
+            out["prediction_drift"] = {
+                "records_with_prediction": drift_n,
+                "mean_abs_rel_error": drift_sum / drift_n}
+        return out
 
 
 def default_store_path() -> Path:

@@ -343,3 +343,83 @@ def test_engine_executes_sharded_with_mesh():
             assert float(r.result.tucker.rel_error(r.x)) < 1.0
         print("OK")
     """)
+
+
+# ---------------------------------------------------------------------------
+# Plan-time schedule search against the PER-DEVICE peak model
+# ---------------------------------------------------------------------------
+
+class TestShardedScheduleSearch:
+    def test_opt_schedule_resolves_with_per_device_peaks(self):
+        # no mesh needed: resolve_schedule(n_shards=8) is pure bookkeeping
+        steps = resolve_schedule((64, 48, 40), (8, 6, 5), methods="eig",
+                                 mode_order="opt", backend="sharded",
+                                 n_shards=8)
+        assert sorted(s.mode for s in steps) == [0, 1, 2]
+        assert steps[0].n_shards == 8    # first step shards the full tensor
+
+    def test_per_device_cap_feasible_only_when_sharded(self):
+        from repro.core.schedule_opt import MemoryCapError, optimize_schedule
+
+        shape, ranks = (64, 48, 40), (8, 6, 5)
+        single = optimize_schedule(shape, ranks, methods=["eig"] * 3)
+        # tightest single-device bottleneck: any order's worst step io
+        steps1 = resolve_schedule(shape, ranks, methods="eig",
+                                  mode_order="opt")
+        cap = max(s.peak_bytes for s in steps1) // 4
+        with pytest.raises(MemoryCapError):
+            optimize_schedule(shape, ranks, methods=["eig"] * 3,
+                              memory_cap_bytes=cap)
+        # the same cap fits once the io slabs divide over 8 devices
+        sharded = optimize_schedule(shape, ranks, methods=["eig"] * 3,
+                                    n_shards=8, memory_cap_bytes=cap)
+        assert sharded.order is not None
+        steps8 = resolve_schedule(shape, ranks, methods="eig",
+                                  mode_order="opt", backend="sharded",
+                                  n_shards=8, memory_cap_bytes=cap)
+        assert all(s.peak_bytes <= cap for s in steps8)
+
+    def test_opt_plan_executes_on_mesh(self):
+        run_in_subprocess("""
+            from repro.core import TuckerConfig, plan, tensor_ops as T
+            mesh = jax.make_mesh((8,), ("data",))
+            rng = np.random.default_rng(0)
+            G = rng.standard_normal((4, 5, 6))
+            Us = [np.linalg.qr(rng.standard_normal((d, r)))[0]
+                  for d, r in zip((24, 40, 16), (4, 5, 6))]
+            X = T.reconstruct(jnp.asarray(G, jnp.float32),
+                              [jnp.asarray(u, jnp.float32) for u in Us])
+            ref = plan(X.shape, X.dtype,
+                       TuckerConfig(ranks=(4, 5, 6), methods="eig")).execute(X)
+            p = plan(X.shape, X.dtype,
+                     TuckerConfig(ranks=(4, 5, 6), methods="eig",
+                                  mode_order="opt", impl="sharded",
+                                  mesh=mesh,
+                                  memory_cap_bytes=64 * 1024 * 1024))
+            assert p.backend == "sharded"
+            res = p.execute(X)
+            err = float(res.tucker.rel_error(X))
+            ref_err = float(ref.tucker.rel_error(X))
+            assert abs(err - ref_err) < 1e-3, (err, ref_err)
+            # sharded sweeps must never donate (shard_map aliasing guard)
+            assert p.donates is False
+        """)
+
+    def test_distributed_wrapper_takes_mode_order_and_cap(self):
+        run_in_subprocess("""
+            from repro.core.distributed import sthosvd_distributed
+            from repro.core.schedule_opt import MemoryCapError
+            mesh = jax.make_mesh((8,), ("data",))
+            X = jnp.asarray(np.random.default_rng(0)
+                            .standard_normal((24, 40, 16)), jnp.float32)
+            res = sthosvd_distributed(X, (4, 5, 6), mesh, methods="eig",
+                                      mode_order="opt")
+            assert float(res.tucker.rel_error(X)) < 1.0
+            try:
+                sthosvd_distributed(X, (4, 5, 6), mesh, methods="eig",
+                                    memory_cap_bytes=1000)
+            except MemoryCapError as e:
+                assert "bytes" in str(e)
+            else:
+                raise AssertionError("cap should have been infeasible")
+        """)
