@@ -17,6 +17,7 @@ def main() -> None:
     from . import order_bench as ob
     from . import paper_figs as pf
     from . import selector_bench as selb
+    from . import serve_bench as svb
     from . import system_bench as sb
 
     benches = {
@@ -31,6 +32,7 @@ def main() -> None:
         "fig7": lambda: pf.fig7_selector_overhead(),
         "fig8": lambda: pf.fig8_matfree(full=args.full),
         "selector": lambda: pf.selector_accuracy(),
+        "serve": lambda: svb.bench_serve(full=args.full),
         "plan": sb.plan_bench,
         "kernels": sb.kernels_bench,
         "grad_compress": sb.grad_compress_bench,

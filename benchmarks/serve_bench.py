@@ -1,0 +1,184 @@
+"""Streaming-serve bench: continuous batching vs one-shot engine runs.
+
+Simulates a Poisson-arrival stream of mixed-shape Tucker requests (shapes
+cluster around a few bucket anchors with per-request jitter, like real
+traffic) and pushes the SAME arrival schedule through two arms:
+
+  * ``oneshot`` — the pre-service serving story: each request is handed to
+    ``TuckerBatchEngine.run([req])`` the moment it arrives.  No cross-
+    request batching, and every distinct jittered shape pays its own
+    selector pass + XLA compile.
+  * ``service`` — ``TuckerService`` with a background worker: requests are
+    bucketed (mask pad mode, pow2 lane fill), so the whole stream runs
+    through a handful of warm vmapped programs with continuous wave refill.
+
+Both arms get one generic warmup execute so baseline jax/jit overhead is
+excluded; the per-odd-shape planning + compile the bucket design avoids is
+deliberately left IN the measurement — that amortization is the subsystem
+under test.  Reports end-to-end throughput and per-request latency
+percentiles (arrival → result), plus per-bucket p95 / pad-waste /
+occupancy rows from ``service.stats()``.
+
+Usage:  python -m benchmarks.serve_bench [--smoke | --full]
+                                         [--out BENCH_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TuckerConfig
+from repro.core.api import plan as make_plan
+from repro.serve import (
+    BucketPolicy,
+    TuckerBatchEngine,
+    TuckerRequest,
+    TuckerService,
+)
+from repro.serve.metrics import LatencyWindow
+
+from .common import emit
+
+RANKS = (4, 4, 4)
+#: bucket anchors the stream's shape clusters hug (all multiples of grid=8)
+CLUSTERS = {False: ((16, 16, 16), (24, 16, 16), (16, 24, 8)),
+            True: ((48, 40, 32), (64, 48, 32), (40, 40, 40))}
+N_REQUESTS = {False: 32, True: 200}
+#: arrival rate as a multiple of the single-request service rate — fast
+#: enough that an unbatched arm falls behind, slow enough to be a stream
+RATE_FACTOR = 3.0
+JITTER = 6   # dims are drawn from [anchor - JITTER, anchor]
+
+
+def make_stream(full: bool, seed: int = 0):
+    """(arrival_s, tensor) pairs: Poisson arrivals, clustered jittered shapes."""
+    rng = np.random.default_rng(seed)
+    clusters = CLUSTERS[full]
+    n = N_REQUESTS[full]
+
+    # calibrate the arrival rate against a warm singleton execute on the
+    # first anchor (also serves as the generic jit warmup for both arms)
+    cfg = TuckerConfig(ranks=RANKS, methods="eig")
+    anchor = clusters[0]
+    x0 = jnp.asarray(rng.standard_normal(anchor), jnp.float32)
+    p = make_plan(anchor, x0.dtype, cfg)
+    jax.block_until_ready(p.execute(x0).tucker.core)
+    t0 = time.perf_counter()
+    jax.block_until_ready(p.execute(x0).tucker.core)
+    t_single = max(time.perf_counter() - t0, 1e-4)
+    rate = RATE_FACTOR / t_single
+
+    stream, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        base = clusters[int(rng.integers(len(clusters)))]
+        dims = tuple(max(int(b - rng.integers(0, JITTER)), r + 1)
+                     for b, r in zip(base, RANKS))
+        x = jnp.asarray(rng.standard_normal(dims), jnp.float32)
+        stream.append((t, x))
+    return stream, cfg, rate
+
+
+def _replay(stream, submit_fn):
+    """Feed the stream at its arrival times; returns total wall seconds."""
+    t0 = time.perf_counter()
+    for arrival, x in stream:
+        lag = arrival - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        submit_fn(arrival, x, t0)
+    return t0
+
+
+def run_oneshot(stream, cfg) -> dict:
+    eng = TuckerBatchEngine()
+    lat = LatencyWindow()
+
+    def submit(arrival, x, t0):
+        eng.run([TuckerRequest(x=x, config=cfg)])
+        lat.add(time.perf_counter() - t0 - arrival)
+
+    t0 = _replay(stream, submit)
+    total = time.perf_counter() - t0
+    return {"bench": "serve_stream", "arm": "oneshot", "n": len(stream),
+            "plans_built": eng.stats["plans_built"],
+            "throughput_rps": len(stream) / total, **lat.snapshot_ms()}
+
+
+def run_service(stream, cfg) -> tuple[dict, list[dict]]:
+    svc = TuckerService(
+        policy=BucketPolicy(grid=8, max_pad_ratio=8.0, pad_mode="mask",
+                            wave_slots=8),
+        max_queue=4 * len(stream), backpressure="block")
+    svc.start()
+    tickets = []
+
+    def submit(arrival, x, t0):
+        tickets.append(svc.submit(x, cfg))
+
+    t0 = _replay(stream, submit)
+    for t in tickets:
+        svc.wait(t, timeout=600)
+    total = time.perf_counter() - t0
+    stats = svc.stats()
+    svc.stop()
+    row = {"bench": "serve_stream", "arm": "service", "n": len(stream),
+           "plans_built": stats["plans_built"],
+           "throughput_rps": len(stream) / total,
+           "pad_waste": stats["pad_waste"], **stats["latency"]}
+    bucket_rows = [
+        {"bench": "bucket", "arm": "service", "bucket": label,
+         "completed": b["completed"], "waves": b["waves"],
+         "pad_waste": b["pad_waste"], "occupancy": b["occupancy"],
+         "p95_ms": b["latency"]["p95_ms"]}
+        for label, b in stats["buckets"].items()]
+    return row, bucket_rows
+
+
+def bench_serve(full: bool = False, seed: int = 0) -> list[dict]:
+    stream, cfg, rate = make_stream(full, seed=seed)
+    one = run_oneshot(stream, cfg)
+    # fresh arrival clock, same schedule/tensors, for the service arm
+    srv, bucket_rows = run_service(stream, cfg)
+    srv["win"] = srv["throughput_rps"] / one["throughput_rps"]
+    for r in (one, srv):
+        r["arrival_rps"] = rate
+        emit(f"serve/{r['arm']}", 1.0 / r["throughput_rps"],
+             f"p95_ms={r['p95_ms']:.1f}")
+    for b in bucket_rows:
+        emit(f"serve/bucket/{b['bucket']}", b["p95_ms"] / 1e3,
+             f"pad_waste={b['pad_waste']:.3f}")
+    print(f"# continuous batching throughput win: {srv['win']:.2f}x "
+          f"({srv['throughput_rps']:.1f} vs {one['throughput_rps']:.1f} rps)")
+    return [one, srv, *bucket_rows]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized stream (the default size)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale stream (minutes on 1 CPU core)")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = bench_serve(full=args.full and not args.smoke)
+    if args.out:
+        doc = {"bench": "serve", "jax_backend": jax.default_backend(),
+               "host": _platform.machine(), "full": args.full, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ from pathlib import Path
 #: keys are folded into a trailing ``notes`` column
 PREFERRED = ("source", "bench", "backend", "op", "methods", "selector",
              "mode_order", "n_devices", "shape", "ranks", "us_per_call",
-             "peak_mb", "rel_err")
+             "peak_mb", "rel_err", "throughput_rps", "p95_ms", "pad_waste")
 SKIP = {"mode", "r", "native", "order"}   # low-signal noise in a cross-bench table
 
 

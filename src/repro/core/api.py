@@ -25,7 +25,7 @@ import json
 import math
 import os
 import sys
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import lru_cache
 from pathlib import Path
 from typing import Callable, Sequence
@@ -608,6 +608,36 @@ class TuckerPlan:
         return out
 
     __call__ = execute
+
+    # -- derivation ----------------------------------------------------------
+    def for_shape(self, shape: Sequence[int], *,
+                  selector: Callable[..., str] | None = None,
+                  keep_methods: bool = False) -> "TuckerPlan":
+        """This plan's config/dtype re-planned at a different ``shape`` — the
+        plan-reuse hook for the serve layer's shape buckets, where a bucket's
+        warm plan spawns plans for the member shapes padded into it.
+
+        By default the selector and mode order re-resolve against the new
+        per-mode problem sizes, so the derived plan is indistinguishable from
+        ``plan(shape, self.dtype, self.config)`` — same schedule, same cached
+        compiled sweep, bitwise-identical execution to a direct plan (what
+        the exact pad mode relies on).  ``keep_methods=True`` instead pins
+        this plan's resolved per-mode solvers and frozen sweep order onto
+        the new shape: zero selector calls, at the price of solver choices
+        tuned for the bucket shape, not the member's.
+        """
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != len(self.shape):
+            raise ValueError(
+                f"plan is for an order-{len(self.shape)} tensor; cannot "
+                f"derive an order-{len(shape)} plan (shape {shape})")
+        if shape == self.shape:
+            return self
+        cfg = self.config
+        if keep_methods:
+            order = tuple(s.mode for s in self.schedule[:len(self.shape)])
+            cfg = replace(cfg, methods=self.methods, mode_order=order)
+        return plan(shape, self.dtype, cfg, selector=selector)
 
     # -- reporting -----------------------------------------------------------
     def describe(self) -> str:

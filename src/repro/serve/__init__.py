@@ -1,5 +1,18 @@
-"""serve substrate: LM continuous batching + Tucker decomposition serving."""
+"""serve substrate: LM continuous batching + streaming Tucker serving.
 
+``TuckerService`` is the streaming front door (async submit/poll, shape
+buckets, backpressure, per-bucket metrics); ``TuckerBatchEngine`` is its
+synchronous one-shot wrapper.
+"""
+
+from .buckets import BucketPolicy, pad_block, pad_waste, slice_valid, trim_result
 from .engine import Request, ServeEngine, TuckerBatchEngine, TuckerRequest
+from .metrics import BucketMetrics, LatencyWindow, TraceWriter
+from .service import RejectedError, ServiceClosed, Ticket, TuckerService
 
-__all__ = ["Request", "ServeEngine", "TuckerBatchEngine", "TuckerRequest"]
+__all__ = [
+    "BucketMetrics", "BucketPolicy", "LatencyWindow", "RejectedError",
+    "Request", "ServeEngine", "ServiceClosed", "Ticket", "TraceWriter",
+    "TuckerBatchEngine", "TuckerRequest", "TuckerService",
+    "pad_block", "pad_waste", "slice_valid", "trim_result",
+]

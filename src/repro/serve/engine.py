@@ -18,13 +18,13 @@ and same-shaped groups execute as a single vmapped program.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.api import TuckerConfig, TuckerPlan, plan as make_plan
+from ..core.api import TuckerConfig, TuckerPlan
 from ..core.sthosvd import SthosvdResult
 from ..models.registry import ModelBundle
 
@@ -141,11 +141,16 @@ class TuckerRequest:
 class TuckerBatchEngine:
     """Serves fleets of small Tucker decompositions with amortized planning.
 
-    Per (shape, dtype, config) group the engine plans ONCE — the adaptive
-    selector and XLA compilation run on the first request only — and then
-    executes each wave of same-shaped requests as one vmapped program via
-    ``TuckerPlan.execute_batch`` (singleton groups fall back to ``execute``
-    so they share the unbatched compiled sweep).
+    A thin synchronous wrapper over :class:`repro.serve.service.TuckerService`
+    running the identity bucket policy (``BucketPolicy.exact()``: every
+    (shape, dtype, pinned config) is its own bucket, waves are unbounded, no
+    request is ever padded) with an unbounded admission queue — exactly the
+    pre-service ``run()`` semantics: per group the service plans ONCE (the
+    adaptive selector and XLA compilation run on the first request only),
+    singleton groups share the unbatched compiled sweep via
+    ``TuckerPlan.execute``, and larger groups execute as one vmapped
+    program via ``execute_batch`` with the service-built stack donated into
+    the sweep (no caller array is ever invalidated).
 
     ``impl`` pins every plan the engine builds to one ops backend (overriding
     each request config's ``impl``) — the serving-side backend axis; the
@@ -170,73 +175,49 @@ class TuckerBatchEngine:
     regime; pair it with per-request ``mode_order="opt"`` configs to let
     the DP search schedules under it.
 
-    Batched waves donate their stacked input buffer into the vmapped sweep
-    (the engine built the stack, so no caller array is ever invalidated);
-    request tensors themselves are never donated.
+    ``record=True`` (optionally with a ``record_store``) runs requests
+    through the eager timed path so engine traffic feeds the autotune
+    flywheel — see :class:`~repro.serve.service.TuckerService`.  For
+    streaming traffic (async submit/poll, shape buckets, backpressure,
+    latency metrics) use the service directly.
     """
 
     def __init__(self, selector=None, *, impl: str | None = None,
                  mesh=None, shard_axis: str | None = None,
-                 memory_cap_bytes: int | None = None):
-        self._selector = selector
-        self._impl = "sharded" if impl is None and mesh is not None else impl
-        self._mesh = mesh
-        self._shard_axis = shard_axis
-        self._cap = memory_cap_bytes
-        self._plans: dict[tuple, TuckerPlan] = {}
-        self.stats = {"plans_built": 0, "requests": 0, "batches": 0,
-                      "backends": {}}
+                 memory_cap_bytes: int | None = None,
+                 record: bool = False, record_store=None):
+        from .buckets import BucketPolicy
+        from .service import TuckerService
+        self.service = TuckerService(
+            selector, policy=BucketPolicy.exact(), impl=impl, mesh=mesh,
+            shard_axis=shard_axis, memory_cap_bytes=memory_cap_bytes,
+            max_queue=None, record=record, record_store=record_store)
+
+    @property
+    def _plans(self) -> dict[tuple, TuckerPlan]:
+        return self.service._plans
+
+    @property
+    def stats(self) -> dict:
+        return self.service.stats()
 
     def _pinned(self, config: TuckerConfig) -> TuckerConfig:
-        from ..core.backend import get_backend
-
-        impl = self._impl if self._impl is not None else config.impl
-        mesh, axis = config.mesh, config.shard_axis
-        if mesh is None and self._mesh is not None:
-            mesh, axis = self._mesh, self._shard_axis or config.shard_axis
-        if impl != "auto" and not get_backend(impl).requires_mesh:
-            mesh = None   # pinned single-device backend: a mesh is moot
-        cap = config.memory_cap_bytes
-        if self._cap is not None:
-            cap = self._cap if cap is None else min(cap, self._cap)
-        if (impl, mesh, axis, cap) != (config.impl, config.mesh,
-                                       config.shard_axis,
-                                       config.memory_cap_bytes):
-            config = replace(config, impl=impl, mesh=mesh, shard_axis=axis,
-                             memory_cap_bytes=cap)
-        return config
+        return self.service._pinned(config)
 
     def plan_for(self, shape, dtype, config: TuckerConfig) -> TuckerPlan:
-        config = self._pinned(config)
-        key = (tuple(shape), str(jnp.dtype(dtype)), config)
-        p = self._plans.get(key)
-        if p is None:
-            p = make_plan(shape, dtype, config, selector=self._selector)
-            self._plans[key] = p
-            self.stats["plans_built"] += 1
-        return p
+        return self.service.plan_for(shape, dtype, config)
 
     def run(self, requests: list[TuckerRequest]) -> list[TuckerRequest]:
-        groups: dict[tuple, list[TuckerRequest]] = {}
-        for r in requests:
-            x = jnp.asarray(r.x)
-            # group on the pinned config: requests differing only in the
-            # overridden impl field still batch into one vmapped wave
-            key = (tuple(x.shape), str(x.dtype), self._pinned(r.config))
-            groups.setdefault(key, []).append(r)
-        for (shape, dtype, config), grp in groups.items():
-            p = self.plan_for(shape, dtype, config)
-            if len(grp) == 1:
-                grp[0].result = p.execute(jnp.asarray(grp[0].x))
-            else:
-                # the stack is engine-built scratch: donate it into the
-                # vmapped sweep so the wave's dead copy is returned to XLA
-                # (plan-level guards still veto unsupported backends)
-                xs = jnp.stack([jnp.asarray(r.x) for r in grp])
-                for r, res in zip(grp, p.execute_batch(xs, donate=True)):
-                    r.result = res
-            self.stats["requests"] += len(grp)
-            self.stats["batches"] += 1
-            per_backend = self.stats["backends"]
-            per_backend[p.backend] = per_backend.get(p.backend, 0) + len(grp)
+        tickets = [self.service.submit(r.x, r.config, rid=r.rid)
+                   for r in requests]
+        self.service.drain()
+        first_err: Exception | None = None
+        for r, t in zip(requests, tickets):
+            try:
+                r.result = self.service.poll(t)
+            except Exception as e:  # noqa: BLE001 - surfaced after the sweep
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
         return requests

@@ -1,0 +1,132 @@
+"""Per-bucket observability for the streaming Tucker service.
+
+Counters + latency windows per bucket, a thread-safe JSONL trace writer,
+and snapshot helpers that :meth:`repro.serve.service.TuckerService.stats`
+assembles into one operator-facing dict.  Everything here is plain Python
+(no jax) so metric reads never touch the device.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+
+#: latency percentiles every snapshot reports, as (label, q) pairs
+PERCENTILES = (("p50_ms", 50.0), ("p95_ms", 95.0), ("p99_ms", 99.0))
+
+
+class LatencyWindow:
+    """Sliding window of the last ``maxlen`` latency samples (seconds).
+
+    Percentiles are computed on demand over the window by linear
+    interpolation — recent-traffic figures, not lifetime averages, which is
+    what an SLO dashboard wants.  ``count``/``total_s`` keep lifetime sums
+    for mean/throughput math.
+    """
+
+    def __init__(self, maxlen: int = 2048):
+        self._window: deque[float] = deque(maxlen=maxlen)
+        self.count = 0
+        self.total_s = 0.0
+
+    def add(self, seconds: float) -> None:
+        self._window.append(float(seconds))
+        self.count += 1
+        self.total_s += float(seconds)
+
+    def percentile(self, q: float) -> float:
+        """q-th percentile (0..100) of the window in SECONDS; 0.0 empty."""
+        if not self._window:
+            return 0.0
+        xs = sorted(self._window)
+        rank = (len(xs) - 1) * q / 100.0
+        lo = math.floor(rank)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (xs[hi] - xs[lo]) * (rank - lo)
+
+    def snapshot_ms(self) -> dict:
+        out = {label: self.percentile(q) * 1e3 for label, q in PERCENTILES}
+        out["mean_ms"] = (self.total_s / self.count * 1e3) if self.count else 0.0
+        return out
+
+
+@dataclass
+class BucketMetrics:
+    """Counters for one shape bucket.  Mutated under the service lock."""
+    bucket: tuple[int, ...]
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    failed: int = 0
+    padded: int = 0              # completed requests that carried slack
+    waves: int = 0
+    lanes: int = 0               # total lanes dispatched (incl. zero-filled)
+    lanes_filled: int = 0        # lanes carrying a real request
+    true_elems: int = 0          # sum of completed requests' true sizes
+    slot_elems: int = 0          # sum of the slots they occupied
+    backends: dict = field(default_factory=dict)
+    solvers: dict = field(default_factory=dict)
+    latency: LatencyWindow = field(default_factory=LatencyWindow)
+    queue_wait: LatencyWindow = field(default_factory=LatencyWindow)
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of slot elements that were slack across completed
+        requests (0.0 = every request fit its bucket exactly)."""
+        return 1.0 - self.true_elems / self.slot_elems if self.slot_elems \
+            else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Filled fraction of dispatched lanes (1.0 = no zero-fill)."""
+        return self.lanes_filled / self.lanes if self.lanes else 0.0
+
+    def snapshot(self, queue_depth: int = 0) -> dict:
+        return {
+            "bucket": list(self.bucket),
+            "submitted": self.submitted, "completed": self.completed,
+            "rejected": self.rejected, "failed": self.failed,
+            "padded": self.padded, "waves": self.waves,
+            "queue_depth": queue_depth,
+            "pad_waste": round(self.pad_waste, 6),
+            "occupancy": round(self.occupancy, 6),
+            "backends": dict(self.backends), "solvers": dict(self.solvers),
+            "latency": self.latency.snapshot_ms(),
+            "queue_wait": self.queue_wait.snapshot_ms(),
+        }
+
+
+class TraceWriter:
+    """Append-only JSONL event log (one object per line), thread-safe.
+
+    Events carry a wall-clock ``t`` and a ``kind`` (``submit`` | ``wave``
+    | ``done`` | ``reject`` | ``error``); everything else is free-form.
+    The file handle opens lazily and every event is flushed — a crashed
+    service leaves a readable trace (the same interrupted-append tolerance
+    the tune store practices).
+    """
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self._lock = threading.Lock()
+        self._fh = None
+
+    def event(self, kind: str, **fields) -> None:
+        line = json.dumps({"t": time.time(), "kind": kind, **fields})
+        with self._lock:
+            if self._fh is None:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                self._fh = self.path.open("a")
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None

@@ -1,0 +1,638 @@
+"""Streaming Tucker serving: async submit/poll over shape buckets.
+
+``TuckerBatchEngine.run()`` is a synchronous one-shot over a pre-collected
+request list; production decomposition traffic is a *stream*.  This module
+is the admission pipeline in front of the plan/execute machinery:
+
+  * ``submit(x, config) -> Ticket`` routes the request into a shape bucket
+    (:mod:`repro.serve.buckets` — odd shapes are zero-padded up to the
+    nearest bucket; the slack is masked out of every Gram/TTM contribution
+    so exact-mode results are bitwise-equal to unpadded execution) and
+    enqueues it under a bounded-queue backpressure policy (``"reject"``
+    raises :class:`RejectedError`, ``"block"`` waits for space).
+  * Waves of up to ``policy.wave_slots`` lanes are formed per bucket and
+    executed through the bucket's warm :class:`~repro.core.api.TuckerPlan`
+    + one vmapped compiled sweep (the process-wide ``_SWEEP_CACHE``), with
+    power-of-two lane fill bounding compiled batch sizes.  Dispatch is
+    pipelined: while wave *i* runs on the device, the service completes
+    wave *i−1* and stacks wave *i+1* from the queue — slots refill without
+    stopping the stream, mirroring ``ServeEngine``'s slot loop.
+  * ``poll(ticket)`` / ``wait(ticket)`` retrieve results; ``drain()`` runs
+    or awaits everything queued.  ``start()`` spawns a background worker so
+    ``submit`` returns immediately (async mode); without it the service is
+    a synchronous pump (``drain`` executes inline).
+  * ``stats()`` exposes per-bucket p50/p95/p99 latency, queue depth,
+    pad-waste and lane-occupancy ratios, and backend/solver counters;
+    ``trace_path=`` appends a JSONL event per submit/wave/completion.
+  * ``record=True`` (or an ambient :func:`repro.tune.recording` context)
+    runs waves through the eager timed path so served traffic feeds the
+    autotune flywheel — optionally straight into a ``record_store``.
+
+Every engine-level pin (``impl`` / ``mesh`` / ``memory_cap_bytes`` /
+donation) flows through unchanged; ``TuckerBatchEngine`` is now a thin
+synchronous wrapper over this service (identity bucket policy, unbounded
+waves).
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from ..core.api import TuckerConfig, TuckerPlan, plan as make_plan
+from ..core.plan import validate_ranks
+from ..core.sthosvd import SthosvdResult
+from .buckets import BucketPolicy, pad_block, pad_waste, slice_valid, trim_result
+from .metrics import BucketMetrics, LatencyWindow, TraceWriter
+
+BACKPRESSURE_MODES = ("reject", "block")
+
+
+class RejectedError(RuntimeError):
+    """submit() refused a request: the admission queue is full (policy
+    ``"reject"``) or could not make progress (``"block"`` with no runnable
+    wave)."""
+
+
+class ServiceClosed(RuntimeError):
+    """submit() after close(): the service no longer admits requests."""
+
+
+@dataclass
+class Ticket:
+    """Handle returned by :meth:`TuckerService.submit`; pass to ``poll`` /
+    ``wait``.  ``padded`` says the request did not fit its bucket exactly
+    (``bucket`` is the slot shape it was padded into)."""
+    rid: int
+    shape: tuple[int, ...]
+    bucket: tuple[int, ...]
+    padded: bool
+    submitted_at: float
+    _job: "_Job" = field(repr=False, default=None)
+
+
+class _Job:
+    """Internal per-request state (Ticket keeps the only reference once the
+    job leaves the queue, so completed work is garbage-collected with its
+    ticket)."""
+    __slots__ = ("rid", "x", "config", "shape", "key", "t_submit",
+                 "result", "error", "event")
+
+    def __init__(self, rid, x, config, shape, key):
+        self.rid = rid
+        self.x = x
+        self.config = config
+        self.shape = shape
+        self.key = key
+        self.t_submit = time.perf_counter()
+        self.result: SthosvdResult | None = None
+        self.error: Exception | None = None
+        self.event = threading.Event()
+
+
+class _BucketState:
+    __slots__ = ("key", "queue", "metrics")
+
+    def __init__(self, key):
+        self.key = key
+        self.queue: deque[_Job] = deque()
+        self.metrics = BucketMetrics(bucket=key[0])
+
+
+class TuckerService:
+    """Continuous-batching decomposition service (see module docstring).
+
+    ``impl`` / ``mesh`` / ``shard_axis`` / ``memory_cap_bytes`` pin every
+    plan the service builds, with exactly the semantics the batch engine
+    documented (request configs keep the tighter memory cap; a mesh is
+    dropped under a single-device impl pin).  ``policy`` is the
+    :class:`~repro.serve.buckets.BucketPolicy`; ``max_queue`` bounds total
+    queued requests (None = unbounded, backpressure off).
+
+    Synchronous use (the engine wrapper, offline batches)::
+
+        svc = TuckerService()
+        t = svc.submit(x, cfg)
+        svc.drain()
+        res = svc.poll(t)
+
+    Streaming use::
+
+        with TuckerService(max_queue=256, backpressure="block") as svc:
+            svc.start()
+            tickets = [svc.submit(x, cfg) for x in stream]
+            results = [svc.wait(t) for t in tickets]
+    """
+
+    def __init__(self, selector=None, *, policy: BucketPolicy | None = None,
+                 impl: str | None = None, mesh=None,
+                 shard_axis: str | None = None,
+                 memory_cap_bytes: int | None = None,
+                 max_queue: int | None = 1024,
+                 backpressure: str = "reject",
+                 record: bool = False, record_store=None,
+                 trace_path=None):
+        if backpressure not in BACKPRESSURE_MODES:
+            raise ValueError(f"backpressure {backpressure!r} not in "
+                             f"{BACKPRESSURE_MODES}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 or None (unbounded)")
+        self._selector = selector
+        self._policy = policy if policy is not None else BucketPolicy()
+        self._impl = "sharded" if impl is None and mesh is not None else impl
+        self._mesh = mesh
+        self._shard_axis = shard_axis
+        self._cap = memory_cap_bytes
+        self._max_queue = max_queue
+        self._backpressure = backpressure
+        self._record = record
+        self._record_store = record_store
+        self._trace = TraceWriter(trace_path) if trace_path else None
+
+        self._plans: dict[tuple, TuckerPlan] = {}
+        self._buckets: dict[tuple, _BucketState] = {}
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._space = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._pending = 0          # queued + in-flight, not yet completed
+        self._next_rid = 0
+        self._counters = {"submitted": 0, "requests": 0, "rejected": 0,
+                          "failed": 0, "batches": 0, "plans_built": 0}
+        self._latency = LatencyWindow()
+        self._t0 = time.perf_counter()
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self._closed = False
+
+    # -- config pinning (the engine's fleet-operator knobs) ------------------
+    def _pinned(self, config: TuckerConfig) -> TuckerConfig:
+        from ..core.backend import get_backend
+
+        impl = self._impl if self._impl is not None else config.impl
+        mesh, axis = config.mesh, config.shard_axis
+        if mesh is None and self._mesh is not None:
+            mesh, axis = self._mesh, self._shard_axis or config.shard_axis
+        if impl != "auto" and not get_backend(impl).requires_mesh:
+            mesh = None   # pinned single-device backend: a mesh is moot
+        cap = config.memory_cap_bytes
+        if self._cap is not None:
+            cap = self._cap if cap is None else min(cap, self._cap)
+        if (impl, mesh, axis, cap) != (config.impl, config.mesh,
+                                       config.shard_axis,
+                                       config.memory_cap_bytes):
+            config = replace(config, impl=impl, mesh=mesh, shard_axis=axis,
+                             memory_cap_bytes=cap)
+        return config
+
+    # -- plan cache ----------------------------------------------------------
+    def plan_for(self, shape, dtype, config: TuckerConfig) -> TuckerPlan:
+        """The (cached) plan a request of this (shape, dtype, config) runs
+        under the service's pins — built on first use, reused forever."""
+        return self._plan_cached(tuple(int(s) for s in shape),
+                                 str(jnp.dtype(dtype)), self._pinned(config))
+
+    def _plan_cached(self, shape: tuple, dtype: str, pinned: TuckerConfig,
+                     *, base: TuckerPlan | None = None) -> TuckerPlan:
+        key = (shape, dtype, pinned)
+        p = self._plans.get(key)
+        if p is None:
+            if base is not None:
+                # derive from the bucket's warm plan (same config/dtype):
+                # the api-level reuse hook for padded member shapes
+                p = base.for_shape(shape, selector=self._selector)
+            else:
+                p = make_plan(shape, dtype, pinned, selector=self._selector)
+            # plan building happens outside the lock (it can be slow); two
+            # threads may race here, in which case the first insert wins
+            with self._lock:
+                if key in self._plans:
+                    return self._plans[key]
+                self._plans[key] = p
+                self._counters["plans_built"] += 1
+        return p
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, x, config: TuckerConfig, *, rid: int | None = None) -> Ticket:
+        """Admit one decomposition request; returns a :class:`Ticket`.
+
+        Validation (ranks vs the TRUE shape) happens here so a bad request
+        fails its caller, not the wave that picks it up.  When the queue is
+        at ``max_queue``: ``backpressure="reject"`` raises
+        :class:`RejectedError` immediately; ``"block"`` waits for space —
+        against the background worker when running, otherwise by pumping a
+        wave inline (synchronous callers backpressure themselves by doing
+        the work).
+        """
+        if self._closed:
+            raise ServiceClosed("service is closed to new submissions")
+        if not hasattr(x, "shape"):
+            x = jnp.asarray(x)
+        shape = tuple(int(s) for s in x.shape)
+        validate_ranks(shape, config.ranks)
+        pinned = self._pinned(config)
+        dtype = str(jnp.dtype(x.dtype))
+        bshape = self._policy.bucket_shape(shape)
+        key = (bshape, dtype, pinned)
+        while True:
+            with self._lock:
+                if self._closed:
+                    raise ServiceClosed("service is closed to new submissions")
+                bs = self._buckets.get(key)
+                if bs is None:
+                    bs = self._buckets[key] = _BucketState(key)
+                if self._max_queue is None or self._pending < self._max_queue:
+                    if rid is None:
+                        rid = self._next_rid
+                    self._next_rid = max(self._next_rid, rid) + 1
+                    job = _Job(rid, x, pinned, shape, key)
+                    bs.queue.append(job)
+                    bs.metrics.submitted += 1
+                    self._pending += 1
+                    self._counters["submitted"] += 1
+                    self._work.notify_all()
+                    break
+                if self._backpressure == "reject":
+                    bs.metrics.rejected += 1
+                    self._counters["rejected"] += 1
+                    if self._trace:
+                        self._trace.event("reject", rid=rid, shape=list(shape),
+                                          bucket=list(bshape))
+                    raise RejectedError(
+                        f"admission queue full ({self._max_queue} pending); "
+                        "retry later or use backpressure='block'")
+                if self._running:
+                    self._space.wait(timeout=0.1)
+                    continue
+            # block policy, no worker: free space by running a wave here
+            if not self._pump_once():
+                raise RejectedError(
+                    "queue full under backpressure='block' with no worker "
+                    "running and no runnable wave")
+        if self._trace:
+            self._trace.event("submit", rid=job.rid, shape=list(shape),
+                              bucket=list(bshape), padded=shape != bshape)
+        return Ticket(rid=job.rid, shape=shape, bucket=bshape,
+                      padded=shape != bshape, submitted_at=time.time(),
+                      _job=job)
+
+    # -- retrieval -----------------------------------------------------------
+    def poll(self, ticket: Ticket) -> SthosvdResult | None:
+        """Non-blocking: the request's result, or None while it is queued or
+        in flight.  Re-raises the request's failure, if it failed."""
+        job = ticket._job
+        if job.error is not None:
+            raise job.error
+        return job.result
+
+    def wait(self, ticket: Ticket, timeout: float | None = None) -> SthosvdResult:
+        """Block until the request completes (driving the queue inline when
+        no worker thread is running), then return its result."""
+        job = ticket._job
+        if not job.event.is_set() and not self._running:
+            self.drain()
+        if not job.event.wait(timeout):
+            raise TimeoutError(f"request {ticket.rid} still pending after "
+                               f"{timeout}s")
+        return self.poll(ticket)
+
+    @property
+    def pending(self) -> int:
+        """Requests admitted but not yet completed (queued + in flight)."""
+        with self._lock:
+            return self._pending
+
+    # -- wave formation ------------------------------------------------------
+    def _take_wave(self) -> tuple[_BucketState, list[_Job]] | None:
+        """Pop the next wave: up to ``wave_slots`` requests from the bucket
+        whose head request has waited longest (FIFO across buckets)."""
+        with self._lock:
+            ready = [bs for bs in self._buckets.values() if bs.queue]
+            if not ready:
+                return None
+            bs = min(ready, key=lambda b: b.queue[0].t_submit)
+            k = len(bs.queue) if self._policy.wave_slots is None \
+                else min(len(bs.queue), self._policy.wave_slots)
+            return bs, [bs.queue.popleft() for _ in range(k)]
+
+    def _dispatch_wave(self, bs: _BucketState, jobs: list[_Job]):
+        """Execute one wave (dispatch only — JAX returns futures) and hand
+        back a ``finish()`` closure that blocks on the results, completes
+        the tickets, and updates metrics.  The pump calls ``finish`` for
+        wave *i* only after dispatching wave *i+1*, so host-side stacking
+        and padding overlap device execution."""
+        bshape, dtype, cfg = bs.key
+        t_start = time.perf_counter()
+        done: list[tuple[_Job, SthosvdResult | None, TuckerPlan | None,
+                         Exception | None]] = []
+        lanes = len(jobs)
+        tune = sys.modules.get("repro.tune")
+        record = self._record or (
+            tune is not None and tune.active_sink() is not None)
+        try:
+            if record:
+                for j in jobs:
+                    done.append(self._run_recorded(j, bshape, dtype, cfg))
+            elif self._policy.pad_mode == "mask" and \
+                    any(j.shape != bshape for j in jobs):
+                # mask mode: mixed true shapes fuse into ONE vmapped wave at
+                # the bucket shape; zero slack is arithmetically inert and
+                # the factors' slack rows come back exactly zero, so each
+                # lane trims to its true shape afterwards
+                p = self._plan_cached(bshape, dtype, cfg)
+                stack = jnp.stack([pad_block(jnp.asarray(j.x), bshape)
+                                   for j in jobs])
+                stack, lanes = self._lane_fill(stack, len(jobs), p)
+                results = p.execute_batch(stack, donate=True)[:len(jobs)]
+                for j, r in zip(jobs, results):
+                    r = trim_result(r, j.shape) if j.shape != bshape else r
+                    done.append((j, r, p, None))
+            else:
+                exact = [j for j in jobs if j.shape == bshape]
+                padded = [j for j in jobs if j.shape != bshape]
+                if exact:
+                    p = self._plan_cached(bshape, dtype, cfg)
+                    if len(exact) == 1 and self._policy.lanes_for(1) == 1:
+                        # singleton: share the unbatched compiled sweep
+                        res = p.execute(jnp.asarray(exact[0].x))
+                        done.append((exact[0], res, p, None))
+                    else:
+                        stack = jnp.stack([jnp.asarray(j.x) for j in exact])
+                        stack, lanes_e = self._lane_fill(stack, len(exact), p)
+                        lanes = lanes_e + len(padded)
+                        results = p.execute_batch(stack, donate=True)
+                        for j, r in zip(exact, results):
+                            done.append((j, r, p, None))
+                if padded:
+                    # the admission slot buffer: every padded member lands in
+                    # a bucket-shaped slot; exact mode then slices the valid
+                    # block back out (bitwise-lossless) and runs it through
+                    # the plan its TRUE shape resolves to — the identical
+                    # cached program a direct decompose() would run, which
+                    # is what makes padded results bitwise-equal to
+                    # unpadded execution
+                    base = self._plans.get((bshape, dtype, cfg))
+                    slots = jnp.stack([pad_block(jnp.asarray(j.x), bshape)
+                                       for j in padded])
+                    for i, j in enumerate(padded):
+                        tp = self._plan_cached(j.shape, dtype, cfg, base=base)
+                        res = tp.execute(slice_valid(slots[i], j.shape),
+                                         donate=True)
+                        done.append((j, res, tp, None))
+        except Exception as e:  # noqa: BLE001 - fail the wave's jobs, not the pump
+            finished = {id(j) for j, *_ in done}
+            for j in jobs:
+                if id(j) not in finished:
+                    done.append((j, None, None, e))
+
+        def finish():
+            for _, res, _, _ in done:
+                if res is not None:
+                    jax.block_until_ready(res.tucker.core)
+            t_done = time.perf_counter()
+            events = []
+            with self._lock:
+                m = bs.metrics
+                m.waves += 1
+                m.lanes += lanes
+                m.lanes_filled += len(jobs)
+                self._counters["batches"] += 1
+                for j, res, p, err in done:
+                    j.result, j.error = res, err
+                    if err is not None:
+                        m.failed += 1
+                        self._counters["failed"] += 1
+                        events.append(("error", {"rid": j.rid,
+                                                 "error": repr(err)}))
+                    else:
+                        lat = t_done - j.t_submit
+                        m.completed += 1
+                        m.padded += j.shape != bshape
+                        m.true_elems += math.prod(j.shape)
+                        m.slot_elems += math.prod(bshape)
+                        m.latency.add(lat)
+                        m.queue_wait.add(t_start - j.t_submit)
+                        m.backends[p.backend] = m.backends.get(p.backend, 0) + 1
+                        for meth in p.methods:
+                            m.solvers[meth] = m.solvers.get(meth, 0) + 1
+                        self._counters["requests"] += 1
+                        self._latency.add(lat)
+                        events.append(("done", {
+                            "rid": j.rid, "bucket": list(bshape),
+                            "latency_s": round(lat, 6),
+                            "backend": p.backend,
+                            "pad_waste": round(pad_waste(j.shape, bshape), 6)}))
+                    self._pending -= 1
+                    j.event.set()
+                self._space.notify_all()
+                self._idle.notify_all()
+            if self._trace:
+                self._trace.event("wave", bucket=list(bshape),
+                                  lanes=lanes, filled=len(jobs),
+                                  pad_mode=self._policy.pad_mode,
+                                  wall_s=round(t_done - t_start, 6))
+                for kind, fields in events:
+                    self._trace.event(kind, **fields)
+
+        return finish
+
+    def _lane_fill(self, stack, n: int, p: TuckerPlan):
+        """Round the wave's batch up to the policy's lane count with
+        zero-filled lanes (bounding compiled batch sizes); sharded plans
+        execute item-by-item, so filler lanes would be pure waste there."""
+        lanes = self._policy.lanes_for(n)
+        if lanes > n and p.backend != "sharded":
+            fill = jnp.zeros((lanes - n, *stack.shape[1:]), stack.dtype)
+            return jnp.concatenate([stack, fill]), lanes
+        return stack, n
+
+    def _run_recorded(self, j: _Job, bshape, dtype, cfg):
+        """Eager timed execution for one request: per-step wall-clock feeds
+        the autotune flywheel (the ambient recording() sink sees the traces
+        via plan.execute itself; ``record_store`` harvests them here)."""
+        try:
+            if self._policy.pad_mode == "mask" and j.shape != bshape:
+                p = self._plan_cached(bshape, dtype, cfg)
+                res = p.execute(pad_block(jnp.asarray(j.x), bshape),
+                                record=True)
+                out = trim_result(res, j.shape)
+            else:
+                base = self._plans.get((bshape, dtype, cfg))
+                p = self._plan_cached(j.shape, dtype, cfg, base=base)
+                res = out = p.execute(jnp.asarray(j.x), record=True)
+            if self._record_store is not None:
+                from .. import tune
+                tune.harvest_result(
+                    res, self._record_store,
+                    dtype=cfg.compute_dtype or dtype,
+                    als_iters=cfg.als_iters)
+            return (j, out, p, None)
+        except Exception as e:  # noqa: BLE001 - per-job failure isolation
+            return (j, None, None, e)
+
+    # -- pumping -------------------------------------------------------------
+    def _pump_once(self) -> bool:
+        """Run one wave to completion inline; False when nothing is queued."""
+        wave = self._take_wave()
+        if wave is None:
+            return False
+        self._dispatch_wave(*wave)()
+        return True
+
+    def drain(self) -> None:
+        """Complete everything admitted so far.  With a worker running this
+        waits; otherwise it pumps waves inline, keeping one wave in flight
+        while the next is stacked (the same pipelining the worker does)."""
+        if self._running:
+            with self._lock:
+                while self._pending > 0 and self._running:
+                    self._idle.wait(timeout=0.1)
+            return
+        finish = None
+        while True:
+            wave = self._take_wave()
+            if wave is None:
+                break
+            nxt = self._dispatch_wave(*wave)
+            if finish is not None:
+                finish()
+            finish = nxt
+        if finish is not None:
+            finish()
+
+    # -- background worker (async mode) --------------------------------------
+    def start(self) -> "TuckerService":
+        """Spawn the background wave pump; ``submit`` becomes fire-and-
+        forget and ``poll``/``wait`` observe completions as they land."""
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+        self._thread = threading.Thread(target=self._pump, daemon=True,
+                                        name="tucker-service")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker (optionally draining the queue first)."""
+        if self._running and drain:
+            self.drain()
+        with self._lock:
+            self._running = False
+            self._work.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+
+    def close(self) -> None:
+        """Refuse new submissions, drain what's queued, stop the worker,
+        and close the trace file."""
+        with self._lock:
+            self._closed = True
+        if self._running:
+            self.stop(drain=True)
+        else:
+            self.drain()
+        if self._trace:
+            self._trace.close()
+
+    def __enter__(self) -> "TuckerService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _pump(self) -> None:
+        finish = None
+        try:
+            while True:
+                wave = self._take_wave()
+                if wave is None:
+                    if finish is not None:
+                        finish()
+                        finish = None
+                        continue   # completions may have unblocked submits
+                    with self._lock:
+                        if not self._running:
+                            break
+                        if not any(b.queue for b in self._buckets.values()):
+                            self._work.wait(timeout=0.05)
+                    continue
+                nxt = self._dispatch_wave(*wave)
+                if finish is not None:
+                    finish()
+                finish = nxt
+        finally:
+            if finish is not None:
+                finish()
+            # a dying pump must not strand waiters: fail whatever remains
+            with self._lock:
+                if self._running:   # left the loop on an unexpected error
+                    self._running = False
+                    err = RuntimeError("service worker died; request was "
+                                       "never executed")
+                    for bs in self._buckets.values():
+                        while bs.queue:
+                            j = bs.queue.popleft()
+                            j.error = err
+                            self._pending -= 1
+                            self._counters["failed"] += 1
+                            bs.metrics.failed += 1
+                            j.event.set()
+                self._idle.notify_all()
+                self._space.notify_all()
+
+    # -- observability -------------------------------------------------------
+    def _bucket_label(self, key, taken: set) -> str:
+        bshape, dtype, cfg = key
+        label = "x".join(str(s) for s in bshape) + f"/{dtype}" \
+            + f"/r{'x'.join(str(r) for r in cfg.ranks)}"
+        if cfg.variant != "sthosvd":
+            label += f"/{cfg.variant}"
+        base, k = label, 2
+        while label in taken:
+            label, k = f"{base}#{k}", k + 1
+        taken.add(label)
+        return label
+
+    def stats(self) -> dict:
+        """Operator snapshot: global counters + per-bucket observability
+        (p50/p95/p99 latency ms, queue depth, pad-waste, occupancy,
+        backend/solver counts).  ``requests``/``batches``/``plans_built``/
+        ``backends`` keep the batch engine's historical meanings."""
+        with self._lock:
+            taken: set = set()
+            buckets = {}
+            backends: dict = {}
+            solvers: dict = {}
+            true_elems = slot_elems = 0
+            for key, bs in self._buckets.items():
+                buckets[self._bucket_label(key, taken)] = \
+                    bs.metrics.snapshot(queue_depth=len(bs.queue))
+                for k, v in bs.metrics.backends.items():
+                    backends[k] = backends.get(k, 0) + v
+                for k, v in bs.metrics.solvers.items():
+                    solvers[k] = solvers.get(k, 0) + v
+                true_elems += bs.metrics.true_elems
+                slot_elems += bs.metrics.slot_elems
+            elapsed = time.perf_counter() - self._t0
+            return {
+                **self._counters,
+                "pending": self._pending,
+                "n_buckets": len(self._buckets),
+                "backends": backends,
+                "solvers": solvers,
+                "pad_waste": round(1.0 - true_elems / slot_elems, 6)
+                             if slot_elems else 0.0,
+                "throughput_rps": self._counters["requests"] / elapsed
+                                  if elapsed > 0 else 0.0,
+                "latency": self._latency.snapshot_ms(),
+                "buckets": buckets,
+            }

@@ -1,0 +1,430 @@
+"""Streaming serve subsystem: buckets, padding parity, backpressure, async.
+
+The load-bearing assertion lives in ``TestPaddingBitwise``: a request padded
+up to a shape bucket must come back **bitwise-equal** to its unpadded
+singleton execution (exact pad mode routes the sliced valid block through
+the plan the TRUE shape resolves to — the identical cached compiled sweep a
+direct ``decompose`` runs).  Mask mode's contract is weaker (exactly-zero
+slack rows, same reconstruction quality) and is tested separately.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.core.api import (
+    CACHE_STATS,
+    TuckerConfig,
+    decompose,
+    plan as make_plan,
+)
+from repro.core.schedule_opt import MemoryCapError
+from repro.serve import (
+    BucketPolicy,
+    RejectedError,
+    ServiceClosed,
+    TuckerBatchEngine,
+    TuckerRequest,
+    TuckerService,
+    pad_block,
+    pad_waste,
+    slice_valid,
+    trim_result,
+)
+
+
+def tensor(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def parts(res):
+    return [res.tucker.core, *res.tucker.factors]
+
+
+def bitwise_equal(a, b):
+    return all(x.dtype == y.dtype and bool(jnp.array_equal(x, y))
+               for x, y in zip(parts(a), parts(b)))
+
+
+CFG = TuckerConfig(ranks=(3, 3, 3), methods="eig")
+
+
+# ---------------------------------------------------------------------------
+# bucket policy
+# ---------------------------------------------------------------------------
+
+class TestBucketPolicy:
+    def test_rounds_each_dim_up_to_grid(self):
+        pol = BucketPolicy(grid=8, max_pad_ratio=10.0)
+        assert pol.bucket_shape((13, 10, 9)) == (16, 16, 16)
+        assert pol.bucket_shape((16, 8, 24)) == (16, 8, 24)
+
+    def test_per_mode_grid(self):
+        pol = BucketPolicy(grid=(4, 8, 16), max_pad_ratio=10.0)
+        assert pol.bucket_shape((5, 5, 5)) == (8, 8, 16)
+        with pytest.raises(ValueError):
+            pol.bucket_shape((5, 5, 5, 5))   # no grid entry for mode 3
+
+    def test_max_pad_ratio_falls_back_to_exact_bucket(self):
+        # (9, 9, 9) -> (16, 16, 16) would be 5.6x the elements: sliver keeps
+        # its own exact bucket instead of burning memory on slack
+        pol = BucketPolicy(grid=8, max_pad_ratio=2.0)
+        assert pol.bucket_shape((9, 9, 9)) == (9, 9, 9)
+        assert pol.bucket_shape((15, 14, 13)) == (16, 16, 16)  # 1.5x: ok
+
+    def test_exact_policy_is_identity(self):
+        pol = BucketPolicy.exact()
+        assert pol.bucket_shape((13, 10, 9)) == (13, 10, 9)
+        assert pol.wave_slots is None
+        assert pol.lanes_for(5) == 5
+
+    def test_lane_pow2_rounds_up_and_caps_at_wave_slots(self):
+        pol = BucketPolicy(wave_slots=8)
+        assert [pol.lanes_for(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BucketPolicy(grid=0)
+        with pytest.raises(ValueError):
+            BucketPolicy(pad_mode="clip")
+        with pytest.raises(ValueError):
+            BucketPolicy(max_pad_ratio=0.5)
+        with pytest.raises(ValueError):
+            BucketPolicy(wave_slots=0)
+
+    def test_pad_slice_roundtrip_is_bitwise_lossless(self):
+        x = tensor((7, 6, 5), seed=3)
+        padded = pad_block(x, (8, 8, 8))
+        assert padded.shape == (8, 8, 8)
+        assert bool(jnp.array_equal(slice_valid(padded, x.shape), x))
+        assert pad_waste(x.shape, (8, 8, 8)) == pytest.approx(1 - 210 / 512)
+        with pytest.raises(ValueError):
+            pad_block(x, (6, 8, 8))   # does not fit
+
+
+# ---------------------------------------------------------------------------
+# padding parity (the acceptance-criteria assertion)
+# ---------------------------------------------------------------------------
+
+class TestPaddingBitwise:
+    @pytest.mark.parametrize("method,dtype", [
+        ("eig", "float32"), ("als", "float32"),
+        ("eig", "bfloat16"), ("als", "bfloat16"),
+    ])
+    @given(dims=st.tuples(st.integers(9, 15), st.integers(9, 15),
+                          st.integers(9, 15)))
+    def test_padded_request_bitwise_equals_unpadded_execution(
+            self, method, dtype, dims):
+        cfg = TuckerConfig(ranks=(3, 3, 3), methods=(method,) * 3)
+        x = tensor(dims, seed=sum(dims), dtype=jnp.dtype(dtype))
+        svc = TuckerService(policy=BucketPolicy(grid=8, max_pad_ratio=8.0))
+        t = svc.submit(x, cfg)
+        assert t.bucket == (16, 16, 16) and t.padded == (dims != (16,) * 3)
+        svc.drain()
+        res = svc.poll(t)
+        ref = decompose(x, cfg)   # unpadded singleton execution
+        assert bitwise_equal(res, ref)
+
+    def test_padded_and_exact_members_mix_in_one_bucket(self):
+        svc = TuckerService(policy=BucketPolicy(grid=8, max_pad_ratio=8.0))
+        xs = [tensor((16, 16, 16), seed=1), tensor((12, 11, 10), seed=2),
+              tensor((16, 16, 16), seed=3), tensor((9, 16, 13), seed=4)]
+        ts = [svc.submit(x, CFG) for x in xs]
+        svc.drain()
+        for x, t in zip(xs, ts):
+            assert bitwise_equal(svc.poll(t), decompose(x, CFG))
+        st_ = svc.stats()
+        assert st_["requests"] == 4 and st_["n_buckets"] == 1
+        (bucket,) = st_["buckets"].values()
+        assert bucket["padded"] == 2
+        assert 0.0 < bucket["pad_waste"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# mask mode (throughput path: one vmapped wave, trimmed factors)
+# ---------------------------------------------------------------------------
+
+class TestMaskMode:
+    @pytest.mark.parametrize("method", ["eig", "als"])
+    def test_slack_rows_come_back_exactly_zero(self, method):
+        cfg = TuckerConfig(ranks=(3, 3, 3), methods=(method,) * 3)
+        x = tensor((13, 12, 11), seed=5)
+        p = make_plan((16, 16, 16), x.dtype, cfg)
+        res = p.execute(pad_block(x, (16, 16, 16)))
+        for u, s in zip(res.tucker.factors, x.shape):
+            assert bool(jnp.all(u[s:] == 0.0))   # zero slack propagates
+
+    def test_mixed_wave_fuses_and_matches_unpadded_quality(self):
+        svc = TuckerService(policy=BucketPolicy(grid=8, max_pad_ratio=8.0,
+                                                pad_mode="mask"))
+        xs = [tensor((13, 12, 11), seed=6), tensor((16, 16, 16), seed=7),
+              tensor((10, 15, 9), seed=8)]
+        ts = [svc.submit(x, CFG) for x in xs]
+        svc.drain()
+        st_ = svc.stats()
+        assert st_["batches"] == 1          # the whole mixed wave fused
+        for x, t in zip(xs, ts):
+            res = svc.poll(t)
+            for u, s in zip(res.tucker.factors, x.shape):
+                assert u.shape[0] == s      # trimmed to the true shape
+                # trimmed factors keep orthonormal columns
+                g = u.T @ u
+                assert float(jnp.max(jnp.abs(g - jnp.eye(g.shape[0])))) < 1e-4
+            ref = decompose(x, CFG)
+            assert float(res.tucker.rel_error(x)) < \
+                float(ref.tucker.rel_error(x)) + 1e-4
+
+    def test_trim_result_preserves_trace(self):
+        x = tensor((13, 12, 11), seed=9)
+        p = make_plan((16, 16, 16), x.dtype, CFG)
+        res = p.execute(pad_block(x, (16, 16, 16)))
+        trimmed = trim_result(res, x.shape)
+        assert trimmed.tucker.core.shape == res.tucker.core.shape
+        assert trimmed.trace is res.trace
+
+
+# ---------------------------------------------------------------------------
+# plan reuse hook
+# ---------------------------------------------------------------------------
+
+class TestForShape:
+    def test_default_matches_direct_plan(self):
+        base = make_plan((16, 16, 16), jnp.float32, CFG)
+        derived = base.for_shape((13, 12, 11))
+        direct = make_plan((13, 12, 11), jnp.float32, CFG)
+        assert derived.shape == (13, 12, 11)
+        assert derived.schedule == direct.schedule
+        assert derived._cache_key(False) == direct._cache_key(False)
+
+    def test_same_shape_returns_self(self):
+        base = make_plan((16, 16, 16), jnp.float32, CFG)
+        assert base.for_shape((16, 16, 16)) is base
+
+    def test_keep_methods_pins_bucket_solvers_and_order(self):
+        cfg = TuckerConfig(ranks=(3, 3, 3), methods=("als", "eig", "als"),
+                           mode_order=(2, 0, 1))
+        base = make_plan((16, 16, 16), jnp.float32, cfg)
+        derived = base.for_shape((12, 11, 10), keep_methods=True)
+        assert derived.methods == base.methods
+        assert tuple(s.mode for s in derived.schedule) == \
+            tuple(s.mode for s in base.schedule)
+
+    def test_order_mismatch_raises(self):
+        base = make_plan((16, 16, 16), jnp.float32, CFG)
+        with pytest.raises(ValueError):
+            base.for_shape((16, 16))
+
+
+# ---------------------------------------------------------------------------
+# admission: backpressure, validation, lifecycle
+# ---------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_reject_policy_raises_and_counts(self):
+        svc = TuckerService(max_queue=2)
+        x = tensor((8, 8, 8))
+        svc.submit(x, CFG)
+        svc.submit(x, CFG)
+        with pytest.raises(RejectedError):
+            svc.submit(x, CFG)
+        assert svc.stats()["rejected"] == 1
+        svc.drain()
+        svc.submit(x, CFG)   # space again after the wave completed
+        svc.drain()
+        assert svc.stats()["requests"] == 3
+
+    def test_block_policy_pumps_inline_without_worker(self):
+        svc = TuckerService(max_queue=1, backpressure="block")
+        x = tensor((8, 8, 8))
+        ts = [svc.submit(x, CFG) for _ in range(3)]   # each submit frees space
+        svc.drain()
+        assert all(svc.poll(t) is not None for t in ts)
+
+    def test_bad_ranks_fail_at_submit(self):
+        svc = TuckerService()
+        with pytest.raises(ValueError):
+            svc.submit(tensor((8, 8, 8)), TuckerConfig(ranks=(9, 2, 2)))
+        assert svc.stats()["submitted"] == 0
+
+    def test_closed_service_refuses_submissions(self):
+        svc = TuckerService()
+        t = svc.submit(tensor((8, 8, 8)), CFG)
+        svc.close()
+        assert svc.poll(t) is not None   # close() drained
+        with pytest.raises(ServiceClosed):
+            svc.submit(tensor((8, 8, 8)), CFG)
+
+    def test_plan_failure_surfaces_through_poll(self):
+        svc = TuckerService(memory_cap_bytes=64)   # nothing fits 64 bytes
+        t = svc.submit(tensor((8, 8, 8)), CFG)
+        svc.drain()
+        with pytest.raises(MemoryCapError):
+            svc.poll(t)
+        assert svc.stats()["failed"] == 1
+
+    def test_wave_slots_bound_batch_size(self):
+        svc = TuckerService(policy=BucketPolicy(grid=1, wave_slots=2,
+                                                lane_pow2=False))
+        ts = [svc.submit(tensor((8, 8, 8), seed=i), CFG) for i in range(5)]
+        svc.drain()
+        assert svc.stats()["batches"] == 3   # ceil(5 / 2)
+        assert all(svc.poll(t) is not None for t in ts)
+
+
+# ---------------------------------------------------------------------------
+# async worker
+# ---------------------------------------------------------------------------
+
+class TestAsync:
+    def test_submit_poll_wait_through_worker(self, tmp_path):
+        trace = tmp_path / "trace.jsonl"
+        with TuckerService(policy=BucketPolicy(grid=8, max_pad_ratio=8.0),
+                           max_queue=64, trace_path=trace) as svc:
+            svc.start()
+            xs = [tensor((13, 12, 11), seed=i) for i in range(5)]
+            ts = [svc.submit(x, CFG) for x in xs]
+            res = [svc.wait(t, timeout=120) for t in ts]
+            assert all(r is not None for r in res)
+            for x, r in zip(xs, res):
+                assert bitwise_equal(r, decompose(x, CFG))
+            st_ = svc.stats()
+            assert st_["requests"] == 5 and st_["pending"] == 0
+            assert st_["latency"]["p95_ms"] > 0.0
+        kinds = [json.loads(l)["kind"] for l in trace.read_text().splitlines()]
+        assert kinds.count("submit") == 5 and kinds.count("done") == 5
+        assert "wave" in kinds
+
+    def test_block_backpressure_against_worker(self):
+        with TuckerService(max_queue=2, backpressure="block") as svc:
+            svc.start()
+            ts = [svc.submit(tensor((8, 8, 8), seed=i), CFG)
+                  for i in range(6)]   # submits block until the worker frees space
+            assert all(svc.wait(t, timeout=120) is not None for t in ts)
+
+    def test_stop_drains_by_default(self):
+        svc = TuckerService()
+        svc.start()
+        t = svc.submit(tensor((8, 8, 8)), CFG)
+        svc.stop()
+        assert svc.poll(t) is not None
+
+
+# ---------------------------------------------------------------------------
+# engine compatibility wrapper
+# ---------------------------------------------------------------------------
+
+class TestEngineParity:
+    def test_results_and_stats_match_pre_service_engine(self):
+        """The rewired engine must reproduce the old run() exactly: same
+        grouping, same plan reuse, same vmapped-batch results, same stats
+        counters (the old semantics, reimplemented inline as the oracle)."""
+        cfg_a = TuckerConfig(ranks=(2, 3, 2), methods="eig")
+        cfg_b = TuckerConfig(ranks=(2, 2, 2), methods="eig")
+        reqs = [TuckerRequest(x=tensor((10, 9, 8), seed=s), config=cfg_a,
+                              rid=s) for s in range(4)]
+        reqs += [TuckerRequest(x=tensor((6, 7, 5), seed=9), config=cfg_b,
+                               rid=99)]
+        eng = TuckerBatchEngine()
+        eng.run(reqs)
+        # oracle: the pre-service grouping semantics
+        p_a = make_plan((10, 9, 8), jnp.float32, cfg_a)
+        p_b = make_plan((6, 7, 5), jnp.float32, cfg_b)
+        ref_batch = p_a.execute_batch(jnp.stack([r.x for r in reqs[:4]]))
+        ref_single = p_b.execute(reqs[4].x)
+        for r, ref in zip(reqs[:4], ref_batch):
+            assert bitwise_equal(r.result, ref)
+        assert bitwise_equal(reqs[4].result, ref_single)
+        stats = eng.stats
+        assert stats["plans_built"] == 2
+        assert stats["requests"] == 5
+        assert stats["batches"] == 2
+        assert stats["backends"] == {p_a.backend: 5}
+        # second wave, same shapes: no new plans (warm-path parity)
+        eng.run([TuckerRequest(x=tensor((10, 9, 8), seed=7), config=cfg_a)])
+        assert eng.stats["plans_built"] == 2
+        assert eng.stats["batches"] == 3
+
+    def test_engine_never_pads(self):
+        eng = TuckerBatchEngine()
+        r = TuckerRequest(x=tensor((13, 11, 9), seed=1), config=CFG)
+        eng.run([r])
+        (bucket,) = eng.stats["buckets"].values()
+        assert bucket["padded"] == 0 and bucket["pad_waste"] == 0.0
+
+    def test_engine_propagates_plan_errors(self):
+        eng = TuckerBatchEngine(memory_cap_bytes=64)
+        with pytest.raises(MemoryCapError):
+            eng.run([TuckerRequest(x=tensor((8, 8, 8)), config=CFG)])
+
+
+# ---------------------------------------------------------------------------
+# autotune flywheel integration
+# ---------------------------------------------------------------------------
+
+class TestRecordFlywheel:
+    def test_service_record_feeds_store_roundtrip(self, tmp_path):
+        from repro.tune import RecordStore
+        from repro.tune.records import HARVEST
+
+        store = RecordStore(tmp_path / "records.jsonl")
+        svc = TuckerService(policy=BucketPolicy(grid=8, max_pad_ratio=8.0),
+                            record=True, record_store=store)
+        x = tensor((13, 12, 11), seed=4)
+        t = svc.submit(x, CFG)
+        t2 = svc.submit(tensor((16, 16, 16), seed=5), CFG)
+        svc.drain()
+        assert svc.poll(t) is not None and svc.poll(t2) is not None
+        ms = store.load()
+        assert len(ms) == 6                      # 2 requests x 3 modes
+        assert all(m.source == HARVEST for m in ms)
+        assert all(m.seconds > 0 for m in ms)
+        # padded request recorded at its TRUE per-mode sizes (exact mode
+        # runs the true-shape plan), so the flywheel learns real problems
+        assert {m.i_n for m in ms} == {13, 12, 11, 16}
+
+    def test_ambient_recording_context_reaches_waves(self, tmp_path):
+        from repro.tune import RecordStore, recording
+
+        store = RecordStore(tmp_path / "records.jsonl")
+        svc = TuckerService()
+        t = svc.submit(tensor((8, 8, 8)), CFG)
+        with recording(store):
+            svc.drain()
+        assert svc.poll(t) is not None
+        assert len(store.load()) == 3            # one per mode
+
+    def test_engine_record_passthrough(self, tmp_path):
+        from repro.tune import RecordStore
+
+        store = RecordStore(tmp_path / "records.jsonl")
+        eng = TuckerBatchEngine(record=True, record_store=store)
+        eng.run([TuckerRequest(x=tensor((8, 8, 8), seed=i), config=CFG)
+                 for i in range(2)])
+        assert len(store.load()) == 6
+
+
+# ---------------------------------------------------------------------------
+# compiled-program bounding
+# ---------------------------------------------------------------------------
+
+class TestLaneBounding:
+    def test_pow2_lane_fill_bounds_batched_program_count(self):
+        """Waves of 3, 5, 6, 7 requests all round to {4, 8} lanes: two
+        batched programs ever, instead of one per observed batch size."""
+        cfg = TuckerConfig(ranks=(2, 2, 2), methods="eig")
+        svc = TuckerService(policy=BucketPolicy(grid=8, wave_slots=8))
+        before = CACHE_STATS["traces"]
+        for n in (3, 5, 6, 7):
+            ts = [svc.submit(tensor((8, 8, 8), seed=100 + n + i), cfg)
+                  for i in range(n)]
+            svc.drain()
+            assert all(svc.poll(t) is not None for t in ts)
+        # one cached jitted sweep, TWO traced programs (4- and 8-lane
+        # batches); without lane fill every n would trace its own
+        assert CACHE_STATS["traces"] - before == 2
