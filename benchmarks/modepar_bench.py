@@ -1,0 +1,150 @@
+"""Mode-parallel sweep bench: sequential vs grouped Grams vs the DP's "auto".
+
+Forces 8 virtual host devices (before jax initializes) and, per asymmetric
+shape, times one planned st-HOSVD sweep for each ``mode_parallel`` arm:
+``off`` (sequential shrink), ``2`` (leading 2-mode group, sharded over the
+mode outside it), ``3`` (all-modes group, replicated), and ``auto`` (the
+latency-priced grouping DP picks).  On one physical CPU the virtual devices
+share silicon, so the signal is DISPATCH STRUCTURE: a group fuses N Gram
+shard_maps + N truncation reshards into one psum program + one multi-TTM —
+exactly the barrier count a latency-bound shape is dominated by.
+
+The trailing check mirrors the acceptance gate: ``auto`` must keep within
+``AUTO_TOL`` of the best fixed arm on at least 2 of the 3 shapes (its
+schedule IS one of the fixed arms — only timing noise separates them).
+
+Usage:  python -m benchmarks.modepar_bench [--smoke | --full]
+                                           [--out BENCH_modepar.json]
+"""
+
+from __future__ import annotations
+
+import os
+
+# must precede jax init; append so externally-set flags survive
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import json
+import platform as _platform
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import TuckerConfig, plan
+
+from .common import emit, lowrank_tensor, time_call
+
+# three ASYMMETRIC shapes (dims divide by 8): one long mode, two-big-one-
+# small, and mixed — the regimes where grouping vs shrinking genuinely trade
+SHAPES = {False: [((64, 16, 16), (4, 4, 4)),
+                  ((32, 32, 8), (4, 4, 4)),
+                  ((24, 16, 40), (4, 4, 4))],
+          True: [((256, 64, 64), (8, 8, 8)),
+                 ((128, 128, 32), (8, 8, 8)),
+                 ((96, 64, 160), (8, 8, 8))]}
+
+ARMS = ("off", 2, 3, "auto")
+
+#: "auto" must stay within this factor of the best FIXED arm per shape —
+#: same compiled programs, so only timing noise separates them
+AUTO_TOL = 1.4
+
+
+def bench_modepar(full: bool = False, reps: int = 5) -> list[dict]:
+    devices = jax.devices()
+    if len(devices) < 8:
+        print(f"# modepar: need 8 devices, have {len(devices)} — skipping")
+        return []
+    mesh = Mesh(np.array(devices[:8]), ("data",))
+    rows: list[dict] = []
+
+    for dims, ranks in SHAPES[full]:
+        x = lowrank_tensor(dims, ranks, noise=0.05)
+        tag = "x".join(map(str, dims))
+        for mp in ARMS:
+            p = plan(x.shape, x.dtype,
+                     TuckerConfig(ranks=ranks, methods="eig", impl="sharded",
+                                  mesh=mesh, mode_parallel=mp))
+            t = time_call(
+                lambda: jax.block_until_ready(p.execute(x).tucker.core),
+                reps=reps)
+            err = float(p.execute(x).tucker.rel_error(x))
+            groups = sorted({s.group for s in p.schedule
+                             if s.group is not None})
+            grouped = sum(1 for s in p.schedule if s.group is not None)
+            emit(f"modepar/{mp}/{tag}", t,
+                 f"rel_err={err:.4f} grouped_modes={grouped}")
+            rows.append({"bench": "modepar", "backend": p.backend,
+                         "n_devices": 8, "mode_par": str(mp),
+                         "methods": "eig", "shape": list(dims),
+                         "ranks": list(ranks), "us_per_call": t * 1e6,
+                         "rel_err": err, "grouped_modes": grouped,
+                         "n_groups": len(groups)})
+        seq = next(r for r in rows[-len(ARMS):] if r["mode_par"] == "off")
+        for r in rows[-len(ARMS):]:
+            r["speedup_vs_seq"] = seq["us_per_call"] / r["us_per_call"]
+    return rows
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    """The bench's own acceptance gates; returns failure strings (empty =
+    pass).  Kept importable so CI can re-assert from the written JSON."""
+    fails: list[str] = []
+    shapes = sorted({tuple(r["shape"]) for r in rows})
+    auto_ok = 0
+    any_group_win = False
+    for shp in shapes:
+        arm = {r["mode_par"]: r for r in rows if tuple(r["shape"]) == shp}
+        fixed = [arm[k] for k in ("off", "2", "3") if k in arm]
+        best_fixed = min(r["us_per_call"] for r in fixed)
+        if arm["auto"]["us_per_call"] <= best_fixed * AUTO_TOL:
+            auto_ok += 1
+        if any(r["us_per_call"] < arm["off"]["us_per_call"]
+               for r in fixed if r["mode_par"] != "off"):
+            any_group_win = True
+    if shapes and auto_ok < 2:
+        fails.append(f"auto within {AUTO_TOL}x of best fixed arm on only "
+                     f"{auto_ok}/{len(shapes)} shapes")
+    if shapes and not any_group_win:
+        fails.append("mode-parallel beat sequential on 0 shapes "
+                     "(expected >= 1 latency-bound win)")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, few reps (CI tier)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger tensors (more FLOPs per barrier)")
+    ap.add_argument("--out", default="BENCH_modepar.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    full = args.full and not args.smoke
+    rows = bench_modepar(full=full, reps=3 if args.smoke else 5)
+    if args.out:
+        doc = {"bench": "modepar", "jax_backend": jax.default_backend(),
+               "host": _platform.machine(), "full": full,
+               "n_devices_available": len(jax.devices()), "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+    fails = check_rows(rows)
+    for f in fails:
+        print(f"CHECK FAILED: {f}")
+    if fails:
+        raise SystemExit(1)
+    if rows:
+        print("checks passed: auto tracks best fixed arm; grouping wins "
+              "on >= 1 shape")
+
+
+if __name__ == "__main__":
+    main()

@@ -117,7 +117,8 @@ def run_service(stream, cfg) -> tuple[dict, list[dict]]:
     svc = TuckerService(
         policy=BucketPolicy(grid=8, max_pad_ratio=8.0, pad_mode="mask",
                             wave_slots=8),
-        max_queue=4 * len(stream), backpressure="block")
+        max_queue=4 * len(stream), backpressure="block",
+        max_inflight_waves=3)
     svc.start()
     tickets = []
 
@@ -133,11 +134,14 @@ def run_service(stream, cfg) -> tuple[dict, list[dict]]:
     row = {"bench": "serve_stream", "arm": "service", "n": len(stream),
            "plans_built": stats["plans_built"],
            "throughput_rps": len(stream) / total,
-           "pad_waste": stats["pad_waste"], **stats["latency"]}
+           "pad_waste": stats["pad_waste"],
+           "max_inflight_waves": stats["max_inflight_waves"],
+           **stats["latency"]}
     bucket_rows = [
         {"bench": "bucket", "arm": "service", "bucket": label,
          "completed": b["completed"], "waves": b["waves"],
          "pad_waste": b["pad_waste"], "occupancy": b["occupancy"],
+         "pipeline_occupancy": b["pipeline_occupancy"],
          "p95_ms": b["latency"]["p95_ms"]}
         for label, b in stats["buckets"].items()]
     return row, bucket_rows
@@ -169,10 +173,13 @@ def main() -> None:
                     help="paper-scale stream (minutes on 1 CPU core)")
     ap.add_argument("--out", default="BENCH_serve.json",
                     help="JSON row file path ('' to skip writing)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="stream RNG seed (arrivals, shapes, tensor data) — "
+                         "vary for run-to-run noise estimates")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    rows = bench_serve(full=args.full and not args.smoke)
+    rows = bench_serve(full=args.full and not args.smoke, seed=args.seed)
     if args.out:
         doc = {"bench": "serve", "jax_backend": jax.default_backend(),
                "host": _platform.machine(), "full": args.full, "rows": rows}

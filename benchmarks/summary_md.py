@@ -18,7 +18,8 @@ from pathlib import Path
 #: columns shown first, in this order, when any row carries them; remaining
 #: keys are folded into a trailing ``notes`` column
 PREFERRED = ("source", "bench", "backend", "op", "methods", "selector",
-             "mode_order", "n_devices", "shape", "ranks", "us_per_call",
+             "mode_order", "mode_par", "n_devices", "shape", "ranks",
+             "us_per_call",
              "peak_mb", "rel_err", "throughput_rps", "p95_ms", "pad_waste")
 SKIP = {"mode", "r", "native", "order"}   # low-signal noise in a cross-bench table
 

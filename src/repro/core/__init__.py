@@ -39,7 +39,8 @@ from .backend import (
 )
 from .cost_model import DEFAULT_COST_MODEL, CostModel
 from .plan import ModeStep, resolve_schedule
-from .schedule_opt import MemoryCapError, ScheduleSearch, optimize_schedule
+from .schedule_opt import (MemoryCapError, ScheduleSearch,
+                           optimize_grouping, optimize_schedule)
 from .selector import Selector, default_selector, extract_features
 from .solvers import ALS, EIG, SVD, als_solve, eig_solve, svd_solve
 from .sthosvd import (
@@ -58,7 +59,8 @@ __all__ = [
     "TuckerConfig", "TuckerPlan", "TuckerTensor",
     "als_solve", "backend", "backend_names", "cost_model", "decompose",
     "default_selector", "eig_solve", "extract_features", "get_backend",
-    "mesh_from_spec", "mesh_spec", "optimize_schedule", "plan", "plan_lib",
+    "mesh_from_spec", "mesh_spec", "optimize_grouping",
+    "optimize_schedule", "plan", "plan_lib",
     "register_backend", "resolve_backend", "resolve_schedule", "sthosvd",
     "sthosvd_als", "sthosvd_eig", "sthosvd_svd", "svd_solve", "tensor_ops",
     "variants",

@@ -121,6 +121,17 @@ class TuckerConfig:
     Donation is automatically disabled where unsupported
     (sharded shard_map sweeps, interpret-mode backends, platforms without
     buffer aliasing) and globally via the ``ATUCKER_NO_DONATE`` env var.
+
+    ``mode_parallel`` opts sharded st-HOSVD sweeps into MODE-PARALLEL
+    groups: group members compute their Grams concurrently from the same
+    un-shrunk tensor (one mesh barrier for the whole group) and truncate in
+    one fused multi-TTM — lower latency, more FLOPs.  ``"off"`` (default)
+    keeps the sequential shrinking sweep; an int ``G ≥ 2`` forces the first
+    G modes of the resolved order into one group; ``"auto"`` lets the
+    schedule DP price sequential vs every grouping per input (latency =
+    max over group members, memory = shared input + concurrent scratches,
+    under ``memory_cap_bytes``) and silently stays sequential on
+    single-device plans.
     """
     ranks: tuple[int, ...]
     variant: str = "sthosvd"
@@ -134,6 +145,7 @@ class TuckerConfig:
     shard_axis: str | None = None
     memory_cap_bytes: int | None = None
     donate_input: bool | None = None
+    mode_parallel: str | int = "off"
 
     def __post_init__(self):
         object.__setattr__(self, "ranks", tuple(int(r) for r in self.ranks))
@@ -167,6 +179,13 @@ class TuckerConfig:
                     "the mesh")
         if self.als_iters < 1 or self.hooi_iters < 0:
             raise ValueError("als_iters must be ≥1 and hooi_iters ≥0")
+        mp = self.mode_parallel
+        if isinstance(mp, bool) or \
+                not (mp in ("off", "auto") or isinstance(mp, int)):
+            raise ValueError(f"mode_parallel {mp!r} must be 'off', 'auto', "
+                             "or an int max group size")
+        if isinstance(mp, int) and mp < 1:
+            raise ValueError(f"mode_parallel={mp} must be >= 1")
         if self.shard_axis is not None and self.mesh is not None and \
                 self.shard_axis not in self.mesh.axis_names:
             raise ValueError(f"shard_axis {self.shard_axis!r} not in mesh "
@@ -199,7 +218,8 @@ class TuckerConfig:
                 "mesh": mesh_spec(self.mesh),
                 "shard_axis": self.shard_axis,
                 "memory_cap_bytes": self.memory_cap_bytes,
-                "donate_input": self.donate_input}
+                "donate_input": self.donate_input,
+                "mode_parallel": self.mode_parallel}
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuckerConfig":
@@ -216,7 +236,8 @@ class TuckerConfig:
                    mesh=mesh_from_spec(d.get("mesh")),
                    shard_axis=d.get("shard_axis"),
                    memory_cap_bytes=d.get("memory_cap_bytes"),
-                   donate_input=d.get("donate_input"))
+                   donate_input=d.get("donate_input"),
+                   mode_parallel=d.get("mode_parallel", "off"))
 
 
 # ---------------------------------------------------------------------------
@@ -272,7 +293,7 @@ def _make_sweep(p: "TuckerPlan", batched: bool, donate: bool = False) -> Callabl
     if p.backend == "sharded":
         # donation is guarded off for shard_map sweeps upstream
         # (_resolve_donate); never build an aliasing program here
-        from .distributed import sweep_sharded
+        from .distributed import sweep_mode_parallel, sweep_sharded
         if cfg.mesh is None:
             raise RuntimeError(
                 "plan requires a mesh to execute its sharded schedule (the "
@@ -283,13 +304,15 @@ def _make_sweep(p: "TuckerPlan", batched: bool, donate: bool = False) -> Callabl
             raise RuntimeError("sharded sweeps do not vmap; execute_batch "
                                "runs sharded plans item by item")
         mesh, axis = cfg.mesh, cfg.resolved_shard_axis
+        run = sweep_mode_parallel \
+            if any(s.group is not None for s in steps) else sweep_sharded
 
         def sweep(x):
             CACHE_STATS["traces"] += 1
             if cdtype is not None:
                 x = x.astype(cdtype)
-            return sweep_sharded(x, steps, mesh=mesh, axis=axis,
-                                 als_iters=cfg.als_iters)
+            return run(x, steps, mesh=mesh, axis=axis,
+                       als_iters=cfg.als_iters)
 
         return jax.jit(sweep)
 
@@ -396,16 +419,24 @@ class TuckerPlan:
         undonated st-HOSVD sweep keeps the caller's (dead after step 0)
         input copy alive through every later step, so those steps charge
         ``input_bytes`` on top of their own working set; a donated sweep
-        returns that buffer to XLA and pays only the per-step peaks."""
+        returns that buffer to XLA and pays only the per-step peaks.
+
+        A leading mode-parallel group counts as "step 0" here: every member
+        reads the full-size input, which its group peak already charges, so
+        the dead-copy surcharge starts after the whole group."""
         base = max(s.peak_bytes for s in self.schedule)
         if self.config.variant != "sthosvd" or self.donates or \
                 len(self.schedule) == 1:
             # t-HOSVD/HOOI read X in (almost) every step — it is already
             # counted in their per-step io, donated or not
             return base
+        from .plan import iter_groups
+        k0 = len(next(iter_groups(self.schedule)))
+        if k0 >= len(self.schedule):
+            return base
         extra = self.input_bytes
-        return max(self.schedule[0].peak_bytes,
-                   max(s.peak_bytes + extra for s in self.schedule[1:]))
+        return max(max(s.peak_bytes for s in self.schedule[:k0]),
+                   max(s.peak_bytes + extra for s in self.schedule[k0:]))
 
     def _resolve_donate(self, created: bool, override: bool | None) -> bool:
         """Donation decision for one execute call.  ``created`` = the device
@@ -443,7 +474,8 @@ class TuckerPlan:
         # compiled for one device set never serves another); donated and
         # undonated variants are distinct programs (aliasing is compiled in)
         return (self.shape, self.dtype,
-                tuple((s.mode, s.method, s.r_n, s.backend, s.shard_mode)
+                tuple((s.mode, s.method, s.r_n, s.backend, s.shard_mode,
+                       s.group)
                       for s in self.schedule),
                 self.config.variant, self.config.als_iters,
                 self.config.compute_dtype, batched, donate,
@@ -650,7 +682,9 @@ class TuckerPlan:
             f"TuckerPlan {self.shape} {self.dtype} -> ranks {cfg.ranks} "
             f"[{cfg.variant}, backend={self.backend}]",
             f"  mode_order={cfg.mode_order!r}  "
-            f"memory_cap_bytes={cap if cap is not None else 'uncapped'}  "
+            + (f"mode_parallel={cfg.mode_parallel!r}  "
+               if cfg.mode_parallel != "off" else "")
+            + f"memory_cap_bytes={cap if cap is not None else 'uncapped'}  "
             f"donate_input={'auto' if cfg.donate_input is None else cfg.donate_input}"
             + (" (resolves: donated for host inputs; a caller-held jax "
                "array is kept)" if self.donates and cfg.donate_input is None
@@ -662,10 +696,12 @@ class TuckerPlan:
                 else ""
             shard = f"  shard_mode={s.shard_mode}/{s.n_shards}" \
                 if per_dev else ""
+            grp = f"  ∥group={s.group}" if s.group is not None else ""
             lines.append(
                 f"  step {k}: mode {s.mode} {s.method:>3s}  "
                 f"I={s.i_n} R={s.r_n} J={s.j_n}  "
-                f"flops={s.flops:.3g}  peak={s.peak_bytes:,}B{shard}{pred}")
+                f"flops={s.flops:.3g}  peak={s.peak_bytes:,}B"
+                f"{shard}{grp}{pred}")
         total_pred = self.total_predicted_s
         lines.append(
             f"  total: flops={self.total_flops:.3g}  "
@@ -746,13 +782,22 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
         selector = timed = TimedSelector(selector)
     cost_model = getattr(selector, "cost_model", None) or \
         default_selector(backend=backend.name).cost_model
+    mp: str | int = config.mode_parallel
+    if not backend.requires_mesh and mp != "off":
+        if mp == "auto":
+            mp = "off"   # single device: sequential shrinking always wins
+        else:
+            raise ValueError(
+                f"mode_parallel={mp} needs a sharded backend (attach a "
+                f"mesh); impl resolved to {backend.name!r}")
     schedule = resolve_schedule(
         shape, config.ranks, variant=config.variant, methods=config.methods,
         mode_order=config.mode_order, selector=selector,
         als_iters=config.als_iters, hooi_iters=config.hooi_iters,
         itemsize=compute_dtype.itemsize, backend=backend.name,
         n_shards=config.n_shards if backend.requires_mesh else 1,
-        cost_model=cost_model, memory_cap_bytes=config.memory_cap_bytes)
+        cost_model=cost_model, memory_cap_bytes=config.memory_cap_bytes,
+        mode_parallel=mp)
     p = TuckerPlan(shape=shape, dtype=str(dtype), config=config,
                    schedule=schedule,
                    select_seconds=timed.seconds if timed else 0.0)

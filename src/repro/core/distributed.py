@@ -27,6 +27,13 @@ module only executes frozen :class:`~repro.core.plan.ModeStep` schedules:
   * :func:`sweep_sharded` — the same schedule as one pure function, compiled
     whole by ``TuckerPlan``'s process-wide sweep cache (zero recompiles on
     plan reuse, exactly like the single-device backends).
+  * :func:`sweep_mode_parallel` — the group-aware sweep for schedules whose
+    steps carry ``group`` ids: every member of a group computes its factor
+    from the SAME un-shrunk tensor (all eig Grams fused into ONE shard_map
+    with one psum each — one mesh barrier for the whole group instead of
+    one per mode), then a single fused multi-TTM truncates all group modes
+    at once.  Lower latency, more FLOPs; the plan-time DP
+    (:mod:`repro.core.schedule_opt`) decides when that trade wins.
 """
 
 from __future__ import annotations
@@ -99,13 +106,64 @@ def _ttm_local(mesh: Mesh, axis: str, ndim: int, mode: int, shard_mode: int):
     return run
 
 
+@lru_cache(maxsize=256)
+def _gram_group_psum(mesh: Mesh, axis: str, ndim: int, modes: tuple,
+                     shard_mode: int):
+    """ONE shard_map producing every group member's psum'd Gram from the
+    same local slab — the mode-parallel latency win: a single mesh barrier
+    amortized over ``len(modes)`` Grams instead of one barrier each."""
+    @jax.jit
+    def run(x):
+        def body(xl):
+            return tuple(jax.lax.psum(T.gram(xl, m), axis) for m in modes)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=_spec_for(ndim, shard_mode, axis),
+            out_specs=tuple(P() for _ in modes),
+        )(x)
+    return run
+
+
+@lru_cache(maxsize=256)
+def _ttm_group_local(mesh: Mesh, axis: str, ndim: int, modes: tuple,
+                     shard_mode: int):
+    """shard_map'd fused multi-TTM: chain every group member's truncation
+    over the local slab in one program (all contraction modes ≠ the shard
+    mode, so no collective is needed at all)."""
+    @jax.jit
+    def run(x, *uts):
+        def body(xl, *utl):
+            for m, u in zip(modes, utl):
+                xl = T.ttm(xl, u, m)
+            return xl
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(_spec_for(ndim, shard_mode, axis),)
+            + (P(),) * len(modes),
+            out_specs=_spec_for(ndim, shard_mode, axis),
+        )(x, *uts)
+    return run
+
+
 def pick_shard_mode(shape: tuple[int, ...], exclude: int, n_shards: int) -> int | None:
     """Largest mode ≠ ``exclude`` divisible by the shard count; None → the
     (shrunk) tensor no longer shards evenly and is cheap enough to replicate
     — st-HOSVD's sequential shrinking makes the late modes tiny."""
+    return pick_shard_mode_group(shape, (exclude,), n_shards)
+
+
+def pick_shard_mode_group(shape: tuple[int, ...], exclude,
+                          n_shards: int) -> int | None:
+    """Largest mode outside ``exclude`` (an iterable of modes) divisible by
+    the shard count.  A mode-parallel group's shard mode must lie OUTSIDE
+    the group: the Gram of the sharded mode itself would need an all-gather,
+    so a group covering every shardable mode runs replicated (``None``) —
+    the memory model prices exactly that, which is how a per-device cap can
+    refuse an all-modes group."""
+    excluded = frozenset(exclude)
     order = sorted(range(len(shape)), key=lambda m: -shape[m])
     for m in order:
-        if m != exclude and shape[m] % n_shards == 0:
+        if m not in excluded and shape[m] % n_shards == 0:
             return m
     return None
 
@@ -113,6 +171,13 @@ def pick_shard_mode(shape: tuple[int, ...], exclude: int, n_shards: int) -> int 
 # ---------------------------------------------------------------------------
 # Frozen-schedule execution (shared by the plan layer and the legacy entry)
 # ---------------------------------------------------------------------------
+
+def _eig_u(s: jax.Array, r_n: int, dtype) -> jax.Array:
+    """Top-r_n eigvecs of a (replicated) Gram, descending, in compute dtype."""
+    _, vecs = jnp.linalg.eigh(
+        s.astype(jnp.promote_types(s.dtype, jnp.float32)))
+    return vecs[:, -r_n:][:, ::-1].astype(dtype)
+
 
 def solve_step_sharded(y: jax.Array, step: ModeStep, mesh: Mesh, axis: str,
                        *, als_iters: int = DEFAULT_ALS_ITERS):
@@ -133,9 +198,7 @@ def solve_step_sharded(y: jax.Array, step: ModeStep, mesh: Mesh, axis: str,
         return res.u, res.y_new
     if step.method == "eig":
         s = _gram_psum(mesh, axis, n, step.mode, step.shard_mode)(y)
-        _, vecs = jnp.linalg.eigh(
-            s.astype(jnp.promote_types(s.dtype, jnp.float32)))
-        u = vecs[:, -step.r_n:][:, ::-1].astype(y.dtype)
+        u = _eig_u(s, step.r_n, y.dtype)
         y = _ttm_local(mesh, axis, n, step.mode, step.shard_mode)(y, u.T)
         return u, y
     if step.method == "als":
@@ -145,24 +208,88 @@ def solve_step_sharded(y: jax.Array, step: ModeStep, mesh: Mesh, axis: str,
     raise ValueError(f"unknown distributed method {step.method!r}")
 
 
+def solve_group_sharded(y: jax.Array, group, mesh: Mesh, axis: str, *,
+                        als_iters: int = DEFAULT_ALS_ITERS):
+    """One frozen mode-parallel group on the mesh: every member's factor is
+    computed from the SAME un-shrunk tensor — all eig Grams through ONE
+    fused shard_map+psum, ALS members under GSPMD against the shared input
+    — then a single fused multi-TTM truncates every group mode at once.
+    Returns ``(factors, y_new)`` with ``factors`` keyed by mode and
+    ``y_new`` sharded on the group's (shared) shard mode.
+
+    Like :func:`solve_step_sharded` this works both eagerly and under an
+    enclosing jit trace.
+    """
+    n = y.ndim
+    for step in group:
+        if step.method not in ("eig", "als"):
+            raise ValueError(
+                f"method {step.method!r} cannot run in a mode-parallel "
+                "group (plan-time resolution should have rejected it)")
+    shard = group[0].shard_mode   # one shard mode serves the whole group
+    y = _reshard(y, mesh, shard, axis)
+    factors: dict[int, jax.Array] = {}
+    if shard is None:
+        # replicated group (it covered every shardable mode): plain local
+        # Grams / ALS on the full tensor, then the fused truncation chain
+        for step in group:
+            if step.method == "eig":
+                factors[step.mode] = _eig_u(T.gram(y, step.mode),
+                                            step.r_n, y.dtype)
+            else:
+                u, _ = als_solve(y, step.mode, step.r_n,
+                                 num_iters=als_iters)
+                factors[step.mode] = u
+        y_new = y
+        for step in group:
+            y_new = T.ttm(y_new, factors[step.mode].T, step.mode)
+        return factors, y_new
+    eig_steps = [s for s in group if s.method == "eig"]
+    if eig_steps:
+        modes = tuple(s.mode for s in eig_steps)
+        grams = _gram_group_psum(mesh, axis, n, modes, shard)(y)
+        for step, s in zip(eig_steps, grams):
+            factors[step.mode] = _eig_u(s, step.r_n, y.dtype)
+    for step in group:
+        if step.method == "als":
+            # GSPMD from the shared (still un-shrunk) input; the eager
+            # y_new it also produces is unused and DCE'd under jit
+            u, _ = als_solve(y, step.mode, step.r_n, num_iters=als_iters)
+            factors[step.mode] = u
+    modes_all = tuple(s.mode for s in group)
+    uts = tuple(factors[m].T for m in modes_all)
+    y = _ttm_group_local(mesh, axis, n, modes_all, shard)(y, *uts)
+    return factors, y
+
+
 def run_sharded_schedule(x: jax.Array, steps, mesh: Mesh, axis: str, *,
                          als_iters: int = DEFAULT_ALS_ITERS,
                          block_until_ready: bool = True):
     """Eager runner: per-step execution with real wall-clock per mode.
 
-    Returns ``(y, factors, seconds)`` like
+    Mode-parallel groups run as one unit; their wall-clock is attributed
+    evenly across the members so ``seconds`` stays index-aligned with
+    ``steps``.  Returns ``(y, factors, seconds)`` like
     :func:`repro.core.plan.run_schedule` (``factors`` keyed by mode).
     """
+    from .plan import iter_groups
     y = x
     factors: dict[int, jax.Array] = {}
     seconds: list[float] = []
-    for step in steps:
+    for batch in iter_groups(steps):
         t0 = time.perf_counter()
-        u, y = solve_step_sharded(y, step, mesh, axis, als_iters=als_iters)
+        if len(batch) == 1:
+            u, y = solve_step_sharded(y, batch[0], mesh, axis,
+                                      als_iters=als_iters)
+            factors[batch[0].mode] = u
+        else:
+            fs, y = solve_group_sharded(y, batch, mesh, axis,
+                                        als_iters=als_iters)
+            factors.update(fs)
         if block_until_ready:
             jax.block_until_ready(y)
-        seconds.append(time.perf_counter() - t0)
-        factors[step.mode] = u
+        dt = time.perf_counter() - t0
+        seconds.extend([dt / len(batch)] * len(batch))
     return y, factors, seconds
 
 
@@ -175,6 +302,27 @@ def sweep_sharded(x, steps, *, mesh: Mesh, axis: str, als_iters: int):
     for step in steps:
         u, y = solve_step_sharded(y, step, mesh, axis, als_iters=als_iters)
         factors[step.mode] = u
+    return y, [factors[m] for m in range(x.ndim)]
+
+
+def sweep_mode_parallel(x, steps, *, mesh: Mesh, axis: str, als_iters: int):
+    """Group-aware whole-sweep: like :func:`sweep_sharded` but schedules
+    carrying ``group`` ids run each group through
+    :func:`solve_group_sharded` (concurrent Grams, one fused multi-TTM).
+    Pure — compiled by the same ``TuckerPlan`` sweep cache, so repeated
+    execution of a mode-parallel plan stays zero-recompile."""
+    from .plan import iter_groups
+    y = x
+    factors: dict[int, jax.Array] = {}
+    for batch in iter_groups(steps):
+        if len(batch) == 1:
+            u, y = solve_step_sharded(y, batch[0], mesh, axis,
+                                      als_iters=als_iters)
+            factors[batch[0].mode] = u
+        else:
+            fs, y = solve_group_sharded(y, batch, mesh, axis,
+                                        als_iters=als_iters)
+            factors.update(fs)
     return y, [factors[m] for m in range(x.ndim)]
 
 
@@ -193,6 +341,7 @@ def sthosvd_distributed(
     selector=None,
     mode_order=None,
     memory_cap_bytes: int | None = None,
+    mode_parallel: str | int = "off",
     block_until_ready: bool = True,
 ) -> SthosvdResult:
     """Distributed flexible st-HOSVD.  ``methods``: 'eig' | 'als' | 'auto'.
@@ -201,6 +350,8 @@ def sthosvd_distributed(
     PER-DEVICE peak model (shard participation per state follows
     :func:`pick_shard_mode`); ``memory_cap_bytes`` is the per-device cap —
     the regime where sharding decides whether a mode fits at all.
+    ``mode_parallel`` ("off" | "auto" | int) opts steps into concurrent
+    mode-parallel groups — see :func:`repro.core.plan.resolve_schedule`.
 
     Thin wrapper over the shared plan machinery: the per-mode solver AND
     shard-mode schedule is resolved ahead of time
@@ -222,7 +373,8 @@ def sthosvd_distributed(
         x.shape, ranks, variant="sthosvd", methods=methods, selector=selector,
         mode_order=mode_order, als_iters=als_iters,
         itemsize=x.dtype.itemsize, backend="sharded",
-        n_shards=mesh.shape[axis], memory_cap_bytes=memory_cap_bytes)
+        n_shards=mesh.shape[axis], memory_cap_bytes=memory_cap_bytes,
+        mode_parallel=mode_parallel)
 
     y, factors, seconds = run_sharded_schedule(
         x, schedule, mesh, axis, als_iters=als_iters,

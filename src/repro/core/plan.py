@@ -47,6 +47,14 @@ class ModeStep:
     device count the step's slab is split across (1 when replicated).
     ``peak_bytes`` is then a PER-DEVICE figure: the sharded I/O slabs divide
     by ``n_shards`` while replicated solver scratch does not.
+
+    ``group`` marks mode-parallel execution: consecutive steps sharing a
+    non-None group id compute their factors concurrently from the SAME
+    un-shrunk tensor (their ``j_n`` reflects the group-entry shape, not the
+    sequential shrink) and truncate together in one fused multi-TTM.
+    ``None`` (the back-compat default) is a sequential singleton.  Group
+    members all record the GROUP's modeled peak (the shared input slab plus
+    every member's concurrent solver scratch) as their ``peak_bytes``.
     """
     mode: int
     method: str          # "eig" | "als" | "svd"
@@ -60,24 +68,27 @@ class ModeStep:
     n_shards: int = 1    # devices this step's tensor is split across
     predicted_s: float = 0.0   # predicted wall-clock (0.0 = no calibrated
                                # cost model was available at plan time)
+    group: int | None = None   # mode-parallel group id (None = sequential)
 
     def to_dict(self) -> dict:
         return {"mode": self.mode, "method": self.method, "i_n": self.i_n,
                 "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
                 "peak_bytes": self.peak_bytes, "backend": self.backend,
                 "shard_mode": self.shard_mode, "n_shards": self.n_shards,
-                "predicted_s": self.predicted_s}
+                "predicted_s": self.predicted_s, "group": self.group}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModeStep":
         shard_mode = d.get("shard_mode")
+        group = d.get("group")
         return cls(mode=int(d["mode"]), method=str(d["method"]),
                    i_n=int(d["i_n"]), r_n=int(d["r_n"]), j_n=int(d["j_n"]),
                    flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]),
                    backend=str(d.get("backend", "matfree")),
                    shard_mode=None if shard_mode is None else int(shard_mode),
                    n_shards=int(d.get("n_shards", 1)),
-                   predicted_s=float(d.get("predicted_s", 0.0)))
+                   predicted_s=float(d.get("predicted_s", 0.0)),
+                   group=None if group is None else int(group))
 
 
 class TimedSelector:
@@ -157,41 +168,84 @@ def _step_cost(method: str, i_n: int, r_n: int, j_n: int,
     return svd_flops(i_n, r_n, j_n)
 
 
-def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
-                     itemsize: int, n_shards: int = 1) -> int:
-    """Modeled peak working set: input + output tensors plus solver scratch
-    (EIG: the I_n×I_n Gram; ALS: L/R iterates; SVD: the explicit unfolding
-    plus its left singular block).
-
-    I/O tensors live in the compute dtype (``itemsize``); solver scratch
-    lives in the *accumulation* dtype — sub-fp32 inputs (bf16/fp16) are
-    solved in fp32 (see solvers.py ``cdtype``), so their scratch is 4-byte,
-    and ALS additionally materializes an fp32 cast of the whole input.
-
-    With ``n_shards > 1`` the figure is PER DEVICE: the I/O slabs (and ALS's
-    cast/R-tensor, which stay sharded with the input) divide by the shard
-    count, while replicated scratch (EIG's psum'd Gram, ALS's L factor and
-    R^T R) does not — the paper's GPU OOM regime is exactly where this
-    distinction decides whether a mode fits.
-    """
+def _solver_scratch_bytes(method: str, i_n: int, r_n: int, j_n: int,
+                          itemsize: int, n_shards: int = 1) -> int:
+    """Modeled solver scratch only (no I/O tensors): EIG's I_n×I_n Gram,
+    ALS's L/R iterates (+ fp32 input cast for sub-fp32 dtypes), SVD's
+    explicit unfolding plus its left singular block.  Scratch lives in the
+    *accumulation* dtype; sharded parts (ALS's R-tensor and cast, which
+    stay with the input) divide by ``n_shards`` while replicated scratch
+    (EIG's psum'd Gram, ALS's L factor and R^T R) does not."""
     accum = max(itemsize, 4)   # bf16/fp16 accumulate in fp32; fp64 stays 8
-    io = (i_n * j_n + r_n * j_n) * itemsize // n_shards
     if method == "eig":
-        scratch = i_n * i_n * accum            # replicated psum'd Gram
-    elif method == "als":
+        return i_n * i_n * accum               # replicated psum'd Gram
+    if method == "als":
         scratch = (2 * i_n * r_n + 2 * r_n * r_n) * accum \
             + 2 * r_n * j_n * accum // n_shards   # R-tensor stays sharded
         if accum != itemsize:
             scratch += i_n * j_n * accum // n_shards  # yc: fp32 input cast
-    else:  # svd materializes the unfolding and U, replicated by design
-        scratch = (i_n * j_n + i_n * min(i_n, j_n)) * accum
+        return scratch
+    # svd materializes the unfolding and U, replicated by design
+    return (i_n * j_n + i_n * min(i_n, j_n)) * accum
+
+
+def _step_peak_bytes(method: str, i_n: int, r_n: int, j_n: int,
+                     itemsize: int, n_shards: int = 1) -> int:
+    """Modeled peak working set: input + output tensors plus solver scratch
+    (see :func:`_solver_scratch_bytes`).
+
+    I/O tensors live in the compute dtype (``itemsize``); with
+    ``n_shards > 1`` the figure is PER DEVICE: the I/O slabs divide by the
+    shard count, replicated scratch does not — the paper's GPU OOM regime
+    is exactly where this distinction decides whether a mode fits.
+    """
+    io = (i_n * j_n + r_n * j_n) * itemsize // n_shards
+    return int(io + _solver_scratch_bytes(method, i_n, r_n, j_n, itemsize,
+                                          n_shards))
+
+
+def _group_peak_bytes(entries, in_elems: int, out_elems: int,
+                      itemsize: int, n_shards: int = 1) -> int:
+    """Modeled per-device peak of one mode-parallel group: the SHARED
+    un-shrunk input slab (every member's Gram reads the same tensor, so it
+    is charged once), the fused multi-TTM's fully-truncated output slab,
+    plus every member's solver scratch CONCURRENTLY (the latency win of
+    running G Grams at once is paid for in G live scratches — the memory
+    coupling that lets a cap force a group to split).
+
+    ``entries`` is a sequence of ``(method, i_n, r_n, j_n)`` at the group's
+    entry shape.  For a singleton group this reduces exactly to
+    :func:`_step_peak_bytes` (in = I_n·J_n, out = R_n·J_n, one scratch).
+    """
+    io = (in_elems + out_elems) * itemsize // n_shards
+    scratch = sum(_solver_scratch_bytes(meth, i_n, r_n, j_n, itemsize,
+                                        n_shards)
+                  for meth, i_n, r_n, j_n in entries)
     return int(io + scratch)
+
+
+def iter_groups(steps):
+    """Partition a schedule into execution groups: consecutive steps sharing
+    a non-None ``group`` id run as ONE mode-parallel group (all factors from
+    the shared un-shrunk input, one fused multi-TTM truncation); ``None``
+    steps are sequential singletons.  Yields lists of :class:`ModeStep`."""
+    batch: list = []
+    for s in steps:
+        if batch and s.group is not None and s.group == batch[0].group:
+            batch.append(s)
+            continue
+        if batch:
+            yield batch
+        batch = [s]
+    if batch:
+        yield batch
 
 
 def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
                als_iters: int, itemsize: int, backend: str,
                n_shards: int = 1, shard_mode: int | None = None,
-               cost_model=None) -> ModeStep:
+               cost_model=None, group: int | None = None,
+               peak_override: int | None = None) -> ModeStep:
     m = selector(i_n=i_n, r_n=r_n, j_n=j_n) if method is None else method
     if m not in SOLVERS:
         raise ValueError(f"unknown solver {m!r}")
@@ -204,12 +258,54 @@ def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
     # registry cost_scale hint is NOT applied on top
     predicted_s = cost_model.predict_seconds(m, i_n, r_n, j_n, als_iters) \
         if cost_model is not None and cost_model.calibrated else 0.0
+    peak = _step_peak_bytes(m, i_n, r_n, j_n, itemsize, eff_shards) \
+        if peak_override is None else peak_override
     return ModeStep(mode=mode, method=m, i_n=i_n, r_n=r_n, j_n=j_n,
                     flops=scale * _step_cost(m, i_n, r_n, j_n, als_iters),
-                    peak_bytes=_step_peak_bytes(m, i_n, r_n, j_n, itemsize,
-                                                eff_shards),
+                    peak_bytes=peak,
                     backend=backend, shard_mode=shard_mode,
-                    n_shards=eff_shards, predicted_s=predicted_s)
+                    n_shards=eff_shards, predicted_s=predicted_s,
+                    group=group)
+
+
+def _make_group_steps(g, gid: int, cur, ranks, methods_g, selector,
+                      als_iters: int, itemsize: int, backend: str,
+                      n_shards: int, cost_model) -> list[ModeStep]:
+    """Emit the ModeSteps of one mode-parallel group: every member is sized
+    at the GROUP-ENTRY shape (``j_n`` keeps the other members un-shrunk —
+    the FLOPs premium of parallel execution), one shard mode serves the
+    whole group (chosen OUTSIDE it, so every member's Gram keeps the shard
+    axis inside its contraction dims; ``None`` = replicated when the group
+    covers every shardable mode), and the GROUP's modeled peak — shared
+    input slab + all members' concurrent scratch — is stamped on each
+    member."""
+    j_base = math.prod(cur)
+    if n_shards > 1:
+        from .distributed import pick_shard_mode_group
+        shard = pick_shard_mode_group(tuple(cur), g, n_shards)
+    else:
+        shard = None
+    eff = n_shards if shard is not None else 1
+    resolved = []
+    for m, meth in zip(g, methods_g):
+        i_n, r_n = cur[m], ranks[m]
+        j_n = j_base // i_n
+        meth = selector(i_n=i_n, r_n=r_n, j_n=j_n) if meth is None else meth
+        if meth == "svd":
+            raise ValueError(
+                f"mode {m} resolved to 'svd', which matricizes and cannot "
+                "join a mode-parallel group; pin eig/als for grouped modes "
+                "(mode_parallel='auto' never groups svd)")
+        resolved.append((meth, i_n, r_n, j_n))
+    out_elems = j_base
+    for m in g:
+        out_elems = out_elems // cur[m] * ranks[m]
+    gpeak = _group_peak_bytes(resolved, j_base, out_elems, itemsize, eff)
+    return [
+        _make_step(m, meth, None, i_n, r_n, j_n, als_iters, itemsize,
+                   backend, n_shards, shard, cost_model=cost_model,
+                   group=gid, peak_override=gpeak)
+        for m, (meth, i_n, r_n, j_n) in zip(g, resolved)]
 
 
 def resolve_schedule(
@@ -228,6 +324,7 @@ def resolve_schedule(
     n_shards: int = 1,
     cost_model=None,
     memory_cap_bytes: int | None = None,
+    mode_parallel: str | int = "off",
 ) -> tuple[ModeStep, ...]:
     """Resolve the full per-mode solver schedule ahead of execution.
 
@@ -265,6 +362,20 @@ def resolve_schedule(
     :class:`repro.core.schedule_opt.MemoryCapError` at plan time, naming
     the binding step — the paper's OOM regime fails before the first byte
     is allocated, and a tight cap can force the slower-but-smaller solver.
+
+    ``mode_parallel`` (sharded st-HOSVD only) opens mode-PARALLEL groups:
+    group members compute their Grams/iterates concurrently from the same
+    un-shrunk tensor and truncate together in one fused multi-TTM — lower
+    latency (fewer collective barriers, priced as the max over members) at
+    more FLOPs (members see un-shrunk ``j_n``).  ``"off"`` (default) keeps
+    the sequential shrink; an int G groups the leading G modes of the
+    resolved order; ``"auto"`` lets the DP price sequential-vs-parallel per
+    input — jointly with order/solver when ``mode_order="opt"``, as a
+    grouping search along the fixed order otherwise.  Group peaks charge
+    the shared input slab plus every member's concurrent scratch, so a
+    tight ``memory_cap_bytes`` can force a group to split.  ``"auto"``
+    degrades to sequential when ``n_shards <= 1`` (no concurrent mesh
+    resources); an explicit int G > 1 there is an error.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
@@ -274,6 +385,30 @@ def resolve_schedule(
                          f"got {variant!r} (t-HOSVD/HOOI re-solve from the "
                          "full tensor; reshard scheduling assumes the "
                          "sequential shrink)")
+    mp: str | int = mode_parallel
+    if isinstance(mp, bool) or \
+            not (mp in ("off", "auto") or isinstance(mp, int)):
+        raise ValueError(f"mode_parallel {mode_parallel!r} must be 'off', "
+                         "'auto', or an int max group size")
+    if isinstance(mp, int):
+        if mp < 1:
+            raise ValueError(f"mode_parallel={mp} must be >= 1")
+        if mp == 1:
+            mp = "off"   # a group of one IS the sequential step
+    if mp != "off":
+        if variant != "sthosvd":
+            raise ValueError("mode_parallel applies to the sequential "
+                             "st-HOSVD sweep only; leave it 'off' for "
+                             f"variant {variant!r}")
+        if n_shards <= 1:
+            if mp == "auto":
+                mp = "off"   # single device: no concurrent mode resources,
+                             # sequential shrinking always wins the latency race
+            else:
+                raise ValueError(
+                    f"mode_parallel={mp} needs a sharded schedule "
+                    "(n_shards > 1): single-device execution has no "
+                    "concurrent mesh resources to assign mode Grams to")
     shape = tuple(int(s) for s in shape)
     ranks = validate_ranks(shape, ranks)
     n = len(shape)
@@ -314,32 +449,75 @@ def resolve_schedule(
         return _capped(tuple(steps))
 
     # st-HOSVD sweep (also HOOI's init): the tensor shrinks between steps
+    # (or between GROUPS when mode_parallel opens one)
     if variant == "sthosvd" or include_init:
         if n_shards > 1:
             from .distributed import pick_shard_mode
-        if mode_order == "opt":
-            from .schedule_opt import optimize_schedule
-            search = optimize_schedule(
-                shape, ranks, methods=fixed, als_iters=als_iters,
-                itemsize=itemsize, n_shards=n_shards, cost_model=cost_model,
-                memory_cap_bytes=memory_cap_bytes)
-            order, opt_methods = list(search.order), list(search.methods)
+        flat_methods: list | None
+        if mp == "auto":
+            # the planner prices sequential-vs-parallel per input: joint
+            # subset DP when the order is searched too, grouping search
+            # along the fixed order otherwise
+            from .schedule_opt import optimize_grouping, optimize_schedule
+            if mode_order == "opt":
+                search = optimize_schedule(
+                    shape, ranks, methods=fixed, als_iters=als_iters,
+                    itemsize=itemsize, n_shards=n_shards,
+                    cost_model=cost_model,
+                    memory_cap_bytes=memory_cap_bytes, max_group=n)
+            else:
+                search = optimize_grouping(
+                    shape, ranks,
+                    tuple(resolve_mode_order(shape, ranks, mode_order)),
+                    methods=fixed, als_iters=als_iters, itemsize=itemsize,
+                    n_shards=n_shards, cost_model=cost_model,
+                    memory_cap_bytes=memory_cap_bytes)
+            groups = list(search.groups)
+            flat_methods = list(search.methods)
         else:
-            order = resolve_mode_order(shape, ranks, mode_order)
-            opt_methods = None
+            if mode_order == "opt":
+                from .schedule_opt import optimize_schedule
+                search = optimize_schedule(
+                    shape, ranks, methods=fixed, als_iters=als_iters,
+                    itemsize=itemsize, n_shards=n_shards,
+                    cost_model=cost_model,
+                    memory_cap_bytes=memory_cap_bytes)
+                order, flat_methods = list(search.order), list(search.methods)
+            else:
+                order = resolve_mode_order(shape, ranks, mode_order)
+                flat_methods = None
+            if mp == "off":
+                groups = [(m,) for m in order]
+            else:   # int G >= 2: fixed strategy — leading group, rest sequential
+                g_lead = min(int(mp), n)
+                groups = [tuple(order[:g_lead])] + [(m,) for m in order[g_lead:]]
         cur = list(shape)
-        for k, mode in enumerate(order):
-            i_n, r_n = cur[mode], ranks[mode]
-            j_n = math.prod(cur) // i_n
-            shard = pick_shard_mode(tuple(cur), mode, n_shards) \
-                if n_shards > 1 else None
-            method = opt_methods[k] if opt_methods is not None \
-                else method_for(mode)
-            steps.append(_make_step(mode, method, selector,
-                                    i_n, r_n, j_n, als_iters, itemsize,
-                                    backend, n_shards, shard,
-                                    cost_model=cost_model))
-            cur[mode] = r_n
+        pos = 0
+        gid = 0
+        for g in groups:
+            if len(g) == 1:
+                mode = g[0]
+                i_n, r_n = cur[mode], ranks[mode]
+                j_n = math.prod(cur) // i_n
+                shard = pick_shard_mode(tuple(cur), mode, n_shards) \
+                    if n_shards > 1 else None
+                method = flat_methods[pos] if flat_methods is not None \
+                    else method_for(mode)
+                steps.append(_make_step(mode, method, selector,
+                                        i_n, r_n, j_n, als_iters, itemsize,
+                                        backend, n_shards, shard,
+                                        cost_model=cost_model))
+                cur[mode] = r_n
+            else:
+                meths_g = [flat_methods[pos + i] if flat_methods is not None
+                           else method_for(m) for i, m in enumerate(g)]
+                steps.extend(_make_group_steps(
+                    g, gid, cur, ranks, meths_g, selector, als_iters,
+                    itemsize, backend, n_shards, cost_model))
+                for m in g:
+                    cur[m] = ranks[m]
+                gid += 1
+            pos += len(g)
     if variant == "sthosvd":
         return _capped(tuple(steps))
 

@@ -25,23 +25,39 @@ plans the per-state shard participation follows
 shape, so different orders genuinely see different per-device peaks — the
 DP searches over shard participation implicitly through the order.
 
+With ``max_group > 1`` the DP also searches MODE-PARALLEL GROUPS: a
+transition may shrink a whole set of modes at once, modeling the sharded
+runner's concurrent-Gram path (all members' Grams from the same un-shrunk
+tensor, one fused multi-TTM truncation).  A group edge is priced as the
+``max`` of its members' step costs — latency, not work — while a FLOPs sum
+is kept as the lexicographic tie-break so sequential execution wins exact
+ties (it never does more work).  A group's modeled peak charges the shared
+full-size input once plus every member's solver scratch CONCURRENTLY
+(:func:`repro.core.plan._group_peak_bytes`), so a ``memory_cap_bytes`` that
+admits each mode alone can still force a group to split.
+
 Entry points:
 
   * :func:`optimize_schedule` — the DP; returns the optimal order + per-step
-    methods + predicted total.  Raises :class:`MemoryCapError` naming the
-    binding step when no complete schedule fits the cap.
+    methods (+ grouping when ``max_group > 1``) + predicted total.  Raises
+    :class:`MemoryCapError` naming the binding step/group when no complete
+    schedule fits the cap.
+  * :func:`optimize_grouping` — grouping-only segmentation DP along a FIXED
+    mode order (explicit ``mode_order`` with ``mode_parallel="auto"``).
   * :func:`validate_schedule_cap` — post-hoc cap check for schedules whose
     order was fixed by the caller (explicit ``mode_order``, t-HOSVD, HOOI
     refinement sweeps); same error contract.
 
 Used by :func:`repro.core.plan.resolve_schedule` when
-``mode_order="opt"`` / ``memory_cap_bytes`` flow in from ``TuckerConfig``.
+``mode_order="opt"`` / ``memory_cap_bytes`` / ``mode_parallel`` flow in
+from ``TuckerConfig``.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from itertools import combinations, product
 from typing import Sequence
 
 from .cost_model import DEFAULT_COST_MODEL, CostModel
@@ -63,17 +79,22 @@ class ScheduleSearch:
     """Result of the subset DP: the optimal order, the solver chosen for
     each position of that order, the predicted total cost (seconds for a
     calibrated cost model, FLOPs otherwise), and how many lattice states
-    were expanded (diagnostics / tune harvesting)."""
+    were expanded (diagnostics / tune harvesting).  ``groups`` partitions
+    ``order`` into consecutive mode-parallel groups (all singletons for a
+    purely sequential schedule; empty for legacy callers that never asked
+    the DP to consider grouping)."""
     order: tuple[int, ...]
     methods: tuple[str, ...]        # per position of ``order``
     total_cost: float
     calibrated: bool                # total_cost is seconds, not FLOPs
     n_states: int
+    groups: tuple[tuple[int, ...], ...] = ()
 
     def to_dict(self) -> dict:
         return {"order": list(self.order), "methods": list(self.methods),
                 "total_cost": self.total_cost, "calibrated": self.calibrated,
-                "n_states": self.n_states}
+                "n_states": self.n_states,
+                "groups": [list(g) for g in self.groups]}
 
 
 def _candidates(methods, mode: int) -> tuple[str, ...]:
@@ -125,6 +146,57 @@ def step_cost(cost_model: CostModel, method: str, i_n: int, r_n: int,
     return cost_model.eig_scale * cost_model.svd_flops(i_n, r_n, j_n)
 
 
+def _price_group(shape, ranks, methods, als_iters, itemsize, n_shards, cur,
+                 g, cost_model):
+    """Every priced solver assignment for running the modes of ``g`` as ONE
+    mode-parallel group at the state whose current dims are ``cur``: yields
+    ``(assign, latency, flops, peak_bytes)``.  Each member is sized at the
+    group-entry shape (J_n keeps the other members un-shrunk), latency is
+    the max over members (they run concurrently), flops the sum (the work
+    tie-break), and the peak is the group model — shared input slab plus
+    every member's scratch at once.  SVD matricizes and never joins a group;
+    a group containing a pinned-svd mode yields nothing (infeasible)."""
+    from .plan import _group_peak_bytes   # shared model; lazy, no cycle
+    in_elems = math.prod(cur)
+    out_elems = in_elems
+    for m in g:
+        out_elems = out_elems // cur[m] * ranks[m]
+    if n_shards > 1:
+        from .distributed import pick_shard_mode_group
+        shard = pick_shard_mode_group(tuple(cur), g, n_shards)
+    else:
+        shard = None
+    eff = n_shards if shard is not None else 1
+    cand_sets = []
+    for m in g:
+        cands = tuple(c for c in _candidates(methods, m) if c != "svd")
+        if not cands:
+            return
+        cand_sets.append(cands)
+    for assign in product(*cand_sets):
+        entries = []
+        lat = fl = 0.0
+        for m, meth in zip(g, assign):
+            i_n, r_n = cur[m], ranks[m]
+            j_n = in_elems // i_n
+            c = step_cost(cost_model, meth, i_n, r_n, j_n, als_iters)
+            lat = max(lat, c)
+            fl += c
+            entries.append((meth, i_n, r_n, j_n))
+        peak = _group_peak_bytes(entries, in_elems, out_elems, itemsize, eff)
+        yield assign, lat, fl, peak
+
+
+def _relax(best, nxt: int, cost: float, flops: float, prev: int,
+           group, assign) -> None:
+    """Lexicographic (latency, flops) relaxation: strictly-better latency
+    wins; at equal latency the lower-work schedule wins, so a parallel
+    group never displaces a sequential plan it merely ties."""
+    cand = best.get(nxt)
+    if cand is None or (cost, flops) < (cand[0], cand[1]):
+        best[nxt] = (cost, flops, prev, tuple(group), tuple(assign))
+
+
 def optimize_schedule(
     shape: Sequence[int],
     ranks: Sequence[int],
@@ -135,6 +207,7 @@ def optimize_schedule(
     n_shards: int = 1,
     cost_model: CostModel | None = None,
     memory_cap_bytes: int | None = None,
+    max_group: int = 1,
 ) -> ScheduleSearch:
     """Exact subset DP over st-HOSVD schedules.
 
@@ -142,82 +215,223 @@ def optimize_schedule(
     ``None`` lets each step choose from :data:`SEARCH_METHODS`.  With
     ``n_shards > 1`` every candidate step's peak is the per-device figure
     for the shard mode :func:`pick_shard_mode` assigns at that state.
+    ``max_group > 1`` additionally searches mode-parallel groupings: a
+    transition may shrink up to ``max_group`` modes at once, priced by the
+    latency/FLOPs rules of :func:`_price_group`; ``max_group=1`` reduces
+    exactly to the sequential DP.
 
     Raises :class:`MemoryCapError` when no complete order fits the cap; the
-    message names the cheapest-memory step that still exceeds it at the
-    deepest reachable state (the *binding* step).
+    message names the cheapest-memory step (or group) that still exceeds it
+    at the deepest reachable state (the *binding* step).
     """
     shape = tuple(int(s) for s in shape)
     ranks = tuple(int(r) for r in ranks)
     n = len(shape)
     cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
     full = (1 << n) - 1
+    max_group = max(1, min(int(max_group), n))
 
-    # best[mask] = (cost, prev_mask, mode, method); transitions only ever
-    # set bits, so ascending-mask iteration is a valid topological order.
-    best: dict[int, tuple[float, int, int, str]] = {0: (0.0, -1, -1, "")}
+    # best[mask] = (cost, flops, prev_mask, group, assign); transitions only
+    # ever set bits, so ascending-mask iteration is a valid topological
+    # order.  cost is the latency objective, flops the lexicographic
+    # tie-break (see _relax).
+    best: dict[int, tuple[float, float, int, tuple, tuple]] = {
+        0: (0.0, 0.0, -1, (), ())}
     for mask in range(full):
         state = best.get(mask)
         if state is None:
             continue
         cur = [ranks[i] if mask >> i & 1 else shape[i] for i in range(n)]
-        for m in range(n):
-            if mask >> m & 1:
-                continue
+        rem = [m for m in range(n) if not mask >> m & 1]
+        for m in rem:   # sequential edges, exactly the max_group=1 DP
             for meth, peak, i_n, r_n, j_n in _priced_candidates(
                     shape, ranks, methods, itemsize, n_shards, cur, m):
                 if memory_cap_bytes is not None and peak > memory_cap_bytes:
                     continue
-                cost = state[0] + step_cost(cm, meth, i_n, r_n, j_n, als_iters)
-                nxt = mask | (1 << m)
-                if nxt not in best or cost < best[nxt][0]:
-                    best[nxt] = (cost, mask, m, meth)
+                c = step_cost(cm, meth, i_n, r_n, j_n, als_iters)
+                _relax(best, mask | (1 << m), state[0] + c, state[1] + c,
+                       mask, (m,), (meth,))
+        for size in range(2, min(max_group, len(rem)) + 1):
+            for g in combinations(rem, size):
+                nxt = mask
+                for m in g:
+                    nxt |= 1 << m
+                for assign, lat, fl, peak in _price_group(
+                        shape, ranks, methods, als_iters, itemsize,
+                        n_shards, cur, g, cm):
+                    if memory_cap_bytes is not None \
+                            and peak > memory_cap_bytes:
+                        continue
+                    _relax(best, nxt, state[0] + lat, state[1] + fl,
+                           mask, g, assign)
 
     if full not in best:
         raise MemoryCapError(_infeasible_message(
             shape, ranks, methods, als_iters, itemsize, n_shards,
-            memory_cap_bytes, best))
+            memory_cap_bytes, best, max_group=max_group, cost_model=cm))
 
-    order: list[int] = []
-    meths: list[str] = []
+    groups: list[tuple[int, ...]] = []
+    meths: list[tuple[str, ...]] = []
     mask = full
     while mask:
-        _, prev, m, meth = best[mask]
-        order.append(m)
-        meths.append(meth)
+        _, _, prev, g, assign = best[mask]
+        groups.append(g)
+        meths.append(assign)
         mask = prev
-    order.reverse()
+    groups.reverse()
     meths.reverse()
-    return ScheduleSearch(order=tuple(order), methods=tuple(meths),
-                          total_cost=best[full][0],
-                          calibrated=cm.calibrated, n_states=len(best))
+    return ScheduleSearch(
+        order=tuple(m for g in groups for m in g),
+        methods=tuple(q for a in meths for q in a),
+        total_cost=best[full][0], calibrated=cm.calibrated,
+        n_states=len(best), groups=tuple(groups))
+
+
+def optimize_grouping(
+    shape: Sequence[int],
+    ranks: Sequence[int],
+    order: Sequence[int],
+    *,
+    methods: Sequence[str] | None = None,
+    als_iters: int = DEFAULT_ALS_ITERS,
+    itemsize: int = 4,
+    n_shards: int = 1,
+    cost_model: CostModel | None = None,
+    memory_cap_bytes: int | None = None,
+    max_group: int | None = None,
+) -> ScheduleSearch:
+    """Mode-parallel grouping search along a FIXED mode order (the
+    ``mode_parallel="auto"`` path when the user pinned ``mode_order``):
+    a segmentation DP over prefixes of ``order`` — ``dp[k]`` is the
+    cheapest latency to have shrunk ``order[:k]``, and a transition runs
+    the contiguous slice ``order[k:k+L]`` as one group (``L=1`` is a plain
+    sequential step).  Solver choice per member follows the same rules as
+    :func:`optimize_schedule`.  ``max_group=None`` allows groups up to the
+    full tensor order."""
+    shape = tuple(int(s) for s in shape)
+    ranks = tuple(int(r) for r in ranks)
+    order = tuple(int(m) for m in order)
+    n = len(order)
+    cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
+    max_group = n if max_group is None else max(1, min(int(max_group), n))
+
+    dp: dict[int, tuple[float, float, int, tuple, tuple]] = {
+        0: (0.0, 0.0, -1, (), ())}
+    for k in range(n):
+        state = dp.get(k)
+        if state is None:
+            continue
+        done = set(order[:k])
+        cur = [ranks[i] if i in done else shape[i]
+               for i in range(len(shape))]
+        m = order[k]
+        for meth, peak, i_n, r_n, j_n in _priced_candidates(
+                shape, ranks, methods, itemsize, n_shards, cur, m):
+            if memory_cap_bytes is not None and peak > memory_cap_bytes:
+                continue
+            c = step_cost(cm, meth, i_n, r_n, j_n, als_iters)
+            _relax(dp, k + 1, state[0] + c, state[1] + c, k, (m,), (meth,))
+        for size in range(2, min(max_group, n - k) + 1):
+            g = order[k:k + size]
+            for assign, lat, fl, peak in _price_group(
+                    shape, ranks, methods, als_iters, itemsize, n_shards,
+                    cur, g, cm):
+                if memory_cap_bytes is not None and peak > memory_cap_bytes:
+                    continue
+                _relax(dp, k + size, state[0] + lat, state[1] + fl,
+                       k, g, assign)
+
+    if n not in dp:
+        deepest = max(dp)
+        done = set(order[:deepest])
+        cur = [ranks[i] if i in done else shape[i]
+               for i in range(len(shape))]
+        cands = [(order[deepest],)] + [
+            order[deepest:deepest + size]
+            for size in range(2, min(max_group, n - deepest) + 1)]
+        binding = _min_peak_binding(shape, ranks, methods, als_iters,
+                                    itemsize, n_shards, cur, cands, cm)
+        raise MemoryCapError(_format_binding(
+            shape, ranks, memory_cap_bytes, sorted(done), binding, n_shards))
+
+    groups: list[tuple[int, ...]] = []
+    meths: list[tuple[str, ...]] = []
+    k = n
+    while k:
+        _, _, prev, g, assign = dp[k]
+        groups.append(g)
+        meths.append(assign)
+        k = prev
+    groups.reverse()
+    meths.reverse()
+    return ScheduleSearch(
+        order=order, methods=tuple(q for a in meths for q in a),
+        total_cost=dp[n][0], calibrated=cm.calibrated,
+        n_states=len(dp), groups=tuple(groups))
+
+
+def _min_peak_binding(shape, ranks, methods, als_iters, itemsize, n_shards,
+                      cur, candidate_groups, cost_model):
+    """The cheapest-memory candidate over ``candidate_groups`` (each a tuple
+    of modes; singletons are plain sequential steps) at the state whose
+    current dims are ``cur`` — the step/group any schedule must eventually
+    pay.  Returns ``(peak, modes, assign, detail)`` where ``detail`` is the
+    singleton's (i_n, r_n, j_n) or ``None`` for a multi-mode group."""
+    binding = None
+    for g in candidate_groups:
+        if len(g) == 1:
+            for meth, peak, i_n, r_n, j_n in _priced_candidates(
+                    shape, ranks, methods, itemsize, n_shards, cur, g[0]):
+                if binding is None or peak < binding[0]:
+                    binding = (peak, g, (meth,), (i_n, r_n, j_n))
+        else:
+            for assign, _lat, _fl, peak in _price_group(
+                    shape, ranks, methods, als_iters, itemsize, n_shards,
+                    cur, g, cost_model):
+                if binding is None or peak < binding[0]:
+                    binding = (peak, g, assign, None)
+    return binding
+
+
+def _format_binding(shape, ranks, cap, done, binding, n_shards) -> str:
+    peak, g, assign, detail = binding
+    dev = " per device" if n_shards > 1 else ""
+    after = f"after shrinking modes {list(done)}, " if done else ""
+    if len(g) == 1:
+        m, meth = g[0], assign[0]
+        i_n, r_n, j_n = detail
+        what = (f"the binding step — mode {m} "
+                f"({meth}, I={i_n} R={r_n} J={j_n})")
+        remedy = ("raise the cap above that, shrink the ranks, "
+                  "or shard over more devices")
+    else:
+        what = (f"the binding group — modes {list(g)} "
+                f"({'+'.join(assign)}, concurrent Grams from the un-shrunk "
+                "input)")
+        remedy = ("raise the cap above that, shrink the ranks, split the "
+                  "group (mode_parallel='off'), or shard over more devices")
+    return (f"memory_cap_bytes={cap:,} is infeasible for shape {shape} → "
+            f"ranks {ranks}: {after}{what} — still needs "
+            f"≥{peak:,} modeled bytes{dev}; {remedy}")
 
 
 def _infeasible_message(shape, ranks, methods, als_iters, itemsize, n_shards,
-                        cap, best) -> str:
-    """Name the binding step: at the deepest reachable state, the remaining
-    mode whose cheapest-memory solver still exceeds the cap by the least —
-    the step any schedule must eventually pay."""
+                        cap, best, max_group=1, cost_model=None) -> str:
+    """Name the binding step (or group): at the deepest reachable state, the
+    remaining candidate whose cheapest-memory pricing still exceeds the cap
+    by the least — the transition any schedule must eventually pay."""
     n = len(shape)
+    cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
     deepest = max(best, key=lambda mask: bin(mask).count("1"))
     cur = [ranks[i] if deepest >> i & 1 else shape[i] for i in range(n)]
     done = [i for i in range(n) if deepest >> i & 1]
-    binding = None   # (peak, mode, method, i, r, j)
-    for m in range(n):
-        if deepest >> m & 1:
-            continue
-        for meth, peak, i_n, r_n, j_n in _priced_candidates(
-                shape, ranks, methods, itemsize, n_shards, cur, m):
-            if binding is None or peak < binding[0]:
-                binding = (peak, m, meth, i_n, r_n, j_n)
-    peak, m, meth, i_n, r_n, j_n = binding
-    dev = " per device" if n_shards > 1 else ""
-    after = f"after shrinking modes {done}, " if done else ""
-    return (f"memory_cap_bytes={cap:,} is infeasible for shape {shape} → "
-            f"ranks {ranks}: {after}the binding step — mode {m} "
-            f"({meth}, I={i_n} R={r_n} J={j_n}) — still needs "
-            f"≥{peak:,} modeled bytes{dev}; raise the cap above that, "
-            "shrink the ranks, or shard over more devices")
+    rem = [m for m in range(n) if not deepest >> m & 1]
+    cands = [(m,) for m in rem]
+    for size in range(2, min(max_group, len(rem)) + 1):
+        cands.extend(combinations(rem, size))
+    binding = _min_peak_binding(shape, ranks, methods, als_iters, itemsize,
+                                n_shards, cur, cands, cm)
+    return _format_binding(shape, ranks, cap, done, binding, n_shards)
 
 
 def validate_schedule_cap(steps, memory_cap_bytes: int) -> None:
@@ -227,8 +441,10 @@ def validate_schedule_cap(steps, memory_cap_bytes: int) -> None:
     for k, s in enumerate(steps):
         if s.peak_bytes > memory_cap_bytes:
             dev = " per device" if s.n_shards > 1 else ""
+            grp = f" in mode-parallel group {s.group}" \
+                if s.group is not None else ""
             raise MemoryCapError(
                 f"schedule exceeds memory_cap_bytes={memory_cap_bytes:,}: "
                 f"step {k} (mode {s.mode}, {s.method}, I={s.i_n} R={s.r_n} "
-                f"J={s.j_n}) models {s.peak_bytes:,} peak bytes{dev}; "
+                f"J={s.j_n}){grp} models {s.peak_bytes:,} peak bytes{dev}; "
                 "mode_order='opt' searches order AND solver under the cap")

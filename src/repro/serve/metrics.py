@@ -65,6 +65,8 @@ class BucketMetrics:
     failed: int = 0
     padded: int = 0              # completed requests that carried slack
     waves: int = 0
+    pipelined_waves: int = 0     # waves dispatched while another was in flight
+    inflight_sum: int = 0        # Σ waves already in flight at each dispatch
     lanes: int = 0               # total lanes dispatched (incl. zero-filled)
     lanes_filled: int = 0        # lanes carrying a real request
     true_elems: int = 0          # sum of completed requests' true sizes
@@ -86,12 +88,28 @@ class BucketMetrics:
         """Filled fraction of dispatched lanes (1.0 = no zero-fill)."""
         return self.lanes_filled / self.lanes if self.lanes else 0.0
 
+    @property
+    def pipeline_occupancy(self) -> float:
+        """Fraction of this bucket's waves dispatched while at least one
+        earlier wave was still in flight (0.0 = fully serial dispatch,
+        → 1.0 = the device never waited for host-side wave stacking)."""
+        return self.pipelined_waves / self.waves if self.waves else 0.0
+
+    @property
+    def avg_inflight(self) -> float:
+        """Mean number of waves already in flight at each dispatch (bounded
+        by the service's ``max_inflight_waves`` − 1)."""
+        return self.inflight_sum / self.waves if self.waves else 0.0
+
     def snapshot(self, queue_depth: int = 0) -> dict:
         return {
             "bucket": list(self.bucket),
             "submitted": self.submitted, "completed": self.completed,
             "rejected": self.rejected, "failed": self.failed,
             "padded": self.padded, "waves": self.waves,
+            "pipelined_waves": self.pipelined_waves,
+            "pipeline_occupancy": round(self.pipeline_occupancy, 6),
+            "avg_inflight": round(self.avg_inflight, 6),
             "queue_depth": queue_depth,
             "pad_waste": round(self.pad_waste, 6),
             "occupancy": round(self.occupancy, 6),

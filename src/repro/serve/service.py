@@ -116,6 +116,16 @@ class TuckerService:
     :class:`~repro.serve.buckets.BucketPolicy`; ``max_queue`` bounds total
     queued requests (None = unbounded, backpressure off).
 
+    ``max_inflight_waves`` bounds CROSS-WAVE PIPELINING: how many dispatched
+    waves may be awaiting results while the pump stacks the next one.  JAX
+    dispatch is async, so each in-flight wave overlaps device execution with
+    host-side padding/stacking of its successors — mode-group k of wave i+1
+    is being built (and dispatched) while wave i still computes.  ``1`` is
+    fully serial (dispatch → block → next), ``2`` (default) the classic
+    one-ahead pipeline the service always did, higher values deepen the
+    window for streams of small waves.  Per-bucket ``pipeline_occupancy``
+    in :meth:`stats` reports how often the window was actually used.
+
     Synchronous use (the engine wrapper, offline batches)::
 
         svc = TuckerService()
@@ -137,6 +147,7 @@ class TuckerService:
                  memory_cap_bytes: int | None = None,
                  max_queue: int | None = 1024,
                  backpressure: str = "reject",
+                 max_inflight_waves: int = 2,
                  record: bool = False, record_store=None,
                  trace_path=None):
         if backpressure not in BACKPRESSURE_MODES:
@@ -144,6 +155,9 @@ class TuckerService:
                              f"{BACKPRESSURE_MODES}")
         if max_queue is not None and max_queue < 1:
             raise ValueError("max_queue must be >= 1 or None (unbounded)")
+        if max_inflight_waves < 1:
+            raise ValueError("max_inflight_waves must be >= 1 (1 = serial "
+                             "dispatch, 2 = classic one-ahead pipelining)")
         self._selector = selector
         self._policy = policy if policy is not None else BucketPolicy()
         self._impl = "sharded" if impl is None and mesh is not None else impl
@@ -152,6 +166,7 @@ class TuckerService:
         self._cap = memory_cap_bytes
         self._max_queue = max_queue
         self._backpressure = backpressure
+        self._max_inflight = int(max_inflight_waves)
         self._record = record
         self._record_store = record_store
         self._trace = TraceWriter(trace_path) if trace_path else None
@@ -322,12 +337,15 @@ class TuckerService:
                 else min(len(bs.queue), self._policy.wave_slots)
             return bs, [bs.queue.popleft() for _ in range(k)]
 
-    def _dispatch_wave(self, bs: _BucketState, jobs: list[_Job]):
+    def _dispatch_wave(self, bs: _BucketState, jobs: list[_Job],
+                       inflight: int = 0):
         """Execute one wave (dispatch only — JAX returns futures) and hand
         back a ``finish()`` closure that blocks on the results, completes
-        the tickets, and updates metrics.  The pump calls ``finish`` for
-        wave *i* only after dispatching wave *i+1*, so host-side stacking
-        and padding overlap device execution."""
+        the tickets, and updates metrics.  The pump keeps up to
+        ``max_inflight_waves`` dispatched-but-unfinished waves, so host-side
+        stacking and padding overlap device execution; ``inflight`` is how
+        many earlier waves were still in flight at this dispatch (recorded
+        as pipeline occupancy)."""
         bshape, dtype, cfg = bs.key
         t_start = time.perf_counter()
         done: list[tuple[_Job, SthosvdResult | None, TuckerPlan | None,
@@ -401,6 +419,8 @@ class TuckerService:
             with self._lock:
                 m = bs.metrics
                 m.waves += 1
+                m.pipelined_waves += inflight > 0
+                m.inflight_sum += inflight
                 m.lanes += lanes
                 m.lanes_filled += len(jobs)
                 self._counters["batches"] += 1
@@ -488,24 +508,25 @@ class TuckerService:
 
     def drain(self) -> None:
         """Complete everything admitted so far.  With a worker running this
-        waits; otherwise it pumps waves inline, keeping one wave in flight
-        while the next is stacked (the same pipelining the worker does)."""
+        waits; otherwise it pumps waves inline, keeping up to
+        ``max_inflight_waves`` in flight while successors are stacked (the
+        same pipelining the worker does)."""
         if self._running:
             with self._lock:
                 while self._pending > 0 and self._running:
                     self._idle.wait(timeout=0.1)
             return
-        finish = None
+        inflight: deque = deque()
         while True:
             wave = self._take_wave()
             if wave is None:
                 break
-            nxt = self._dispatch_wave(*wave)
-            if finish is not None:
-                finish()
-            finish = nxt
-        if finish is not None:
-            finish()
+            inflight.append(self._dispatch_wave(*wave,
+                                                inflight=len(inflight)))
+            while len(inflight) >= self._max_inflight:
+                inflight.popleft()()
+        while inflight:
+            inflight.popleft()()
 
     # -- background worker (async mode) --------------------------------------
     def start(self) -> "TuckerService":
@@ -550,14 +571,13 @@ class TuckerService:
         self.close()
 
     def _pump(self) -> None:
-        finish = None
+        inflight: deque = deque()
         try:
             while True:
                 wave = self._take_wave()
                 if wave is None:
-                    if finish is not None:
-                        finish()
-                        finish = None
+                    if inflight:
+                        inflight.popleft()()
                         continue   # completions may have unblocked submits
                     with self._lock:
                         if not self._running:
@@ -565,13 +585,13 @@ class TuckerService:
                         if not any(b.queue for b in self._buckets.values()):
                             self._work.wait(timeout=0.05)
                     continue
-                nxt = self._dispatch_wave(*wave)
-                if finish is not None:
-                    finish()
-                finish = nxt
+                inflight.append(self._dispatch_wave(*wave,
+                                                    inflight=len(inflight)))
+                while len(inflight) >= self._max_inflight:
+                    inflight.popleft()()
         finally:
-            if finish is not None:
-                finish()
+            while inflight:
+                inflight.popleft()()
             # a dying pump must not strand waiters: fail whatever remains
             with self._lock:
                 if self._running:   # left the loop on an unexpected error
@@ -626,6 +646,7 @@ class TuckerService:
             return {
                 **self._counters,
                 "pending": self._pending,
+                "max_inflight_waves": self._max_inflight,
                 "n_buckets": len(self._buckets),
                 "backends": backends,
                 "solvers": solvers,

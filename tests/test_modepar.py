@@ -1,0 +1,574 @@
+"""Mode-parallel sweeps: group-aware shard picking, schedule resolution and
+plan plumbing (pure, no devices), the grouped DP vs brute-force enumeration
+over order × solver × grouping, cap-forced group splits and the binding-group
+error, and end-to-end numerical parity of mode-parallel vs sequential
+execution on 8 virtual CPU devices (subprocess, same launch contract as
+tests/test_sharded.py)."""
+
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    MemoryCapError,
+    TuckerConfig,
+    TuckerPlan,
+    optimize_grouping,
+    optimize_schedule,
+    plan,
+)
+from repro.core.distributed import pick_shard_mode, pick_shard_mode_group
+from repro.core.plan import (
+    ModeStep,
+    _group_peak_bytes,
+    _step_peak_bytes,
+    iter_groups,
+    resolve_schedule,
+)
+from repro.core.schedule_opt import (_price_group, _priced_candidates,
+                                     _relax, step_cost)
+from repro.core.cost_model import DEFAULT_COST_MODEL
+
+from test_sharded import run_in_subprocess
+
+
+# ---------------------------------------------------------------------------
+# Group-aware shard picking (pure function)
+# ---------------------------------------------------------------------------
+
+class TestPickShardModeGroup:
+    def test_picks_largest_mode_outside_group(self):
+        assert pick_shard_mode_group((64, 16, 16), (1, 2), 8) == 0
+        assert pick_shard_mode_group((64, 16, 16), (0, 1), 8) == 2
+
+    def test_group_covering_all_shardable_modes_replicates(self):
+        assert pick_shard_mode_group((32, 32, 32), (0, 1, 2), 8) is None
+        # the only mode outside the group does not divide
+        assert pick_shard_mode_group((9, 32, 32), (1, 2), 8) is None
+
+    def test_singleton_group_matches_pick_shard_mode(self):
+        for shape in ((24, 40, 16), (64, 15, 8), (5, 7, 9), (4, 5, 16)):
+            for m in range(3):
+                for n in (1, 4, 8):
+                    assert pick_shard_mode(shape, m, n) == \
+                        pick_shard_mode_group(shape, (m,), n)
+
+
+# ---------------------------------------------------------------------------
+# Schedule resolution: groups, group peaks, validation
+# ---------------------------------------------------------------------------
+
+class TestGroupSchedule:
+    def test_int_forces_leading_group(self):
+        steps = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel=2)
+        assert [s.group for s in steps] == [0, 0, None]
+        g = steps[:2]
+        # both members sized at the GROUP-ENTRY (un-shrunk) shape
+        assert g[0].j_n == 16 * 16 and g[1].j_n == 64 * 16
+        # one shard mode serves the group, chosen OUTSIDE it
+        assert g[0].shard_mode == g[1].shard_mode == 2
+        # the group's shared peak is stamped on every member
+        assert g[0].peak_bytes == g[1].peak_bytes
+        # the trailing step shrank both group modes first
+        assert steps[2].j_n == 4 * 4
+
+    def test_group_peak_is_shared_input_plus_concurrent_scratch(self):
+        steps = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel=2)
+        entries = [(s.method, s.i_n, s.r_n, s.j_n) for s in steps[:2]]
+        in_elems = 64 * 16 * 16
+        out_elems = 4 * 4 * 16   # group modes 0,1 shrink; mode 2 does not
+        assert steps[0].peak_bytes == _group_peak_bytes(
+            entries, in_elems, out_elems, 4, 8)
+
+    def test_singleton_group_peak_reduces_to_step_peak(self):
+        # the group model with one entry must equal the sequential model
+        for meth in ("eig", "als"):
+            for i_n, r_n, j_n, eff in ((64, 4, 256, 8), (33, 5, 77, 1)):
+                one = _group_peak_bytes([(meth, i_n, r_n, j_n)],
+                                        i_n * j_n, r_n * j_n, 4, eff)
+                assert one == _step_peak_bytes(meth, i_n, r_n, j_n, 4, eff)
+
+    def test_off_and_one_are_sequential(self):
+        ref = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                               backend="sharded", n_shards=8)
+        for mp in ("off", 1):
+            steps = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                                     backend="sharded", n_shards=8,
+                                     mode_parallel=mp)
+            assert steps == ref
+            assert all(s.group is None for s in steps)
+
+    def test_auto_single_device_silently_sequential(self):
+        steps = resolve_schedule((32, 32, 32), (4, 4, 4), methods="eig",
+                                 mode_parallel="auto")
+        assert all(s.group is None for s in steps)
+
+    def test_int_single_device_rejected(self):
+        with pytest.raises(ValueError, match="n_shards"):
+            resolve_schedule((32, 32, 32), (4, 4, 4), methods="eig",
+                             mode_parallel=2)
+
+    def test_invalid_values_rejected(self):
+        for bad in ("on", 0, -1, True, 2.5):
+            with pytest.raises(ValueError):
+                resolve_schedule((32, 32, 32), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel=bad)
+
+    def test_non_sthosvd_rejected(self):
+        for variant in ("thosvd", "hooi"):
+            with pytest.raises(ValueError, match="sequential st-HOSVD"):
+                resolve_schedule((32, 32, 32), (4, 4, 4), methods="eig",
+                                 variant=variant, mode_parallel="auto")
+
+    def test_svd_member_rejected_from_group(self):
+        with pytest.raises(ValueError, match="svd"):
+            resolve_schedule((64, 16, 16), (4, 4, 4), methods="svd",
+                             backend="sharded", n_shards=8, mode_parallel=2)
+
+    def test_auto_groups_symmetric_shape(self):
+        # symmetric dims: any sequential order pays the same first full-size
+        # step PLUS shrunk follow-ups; the all-modes group pays only the max
+        steps = resolve_schedule((32, 32, 32), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel="auto")
+        assert [s.group for s in steps] == [0, 0, 0]
+        # all shardable modes are inside the group → replicated execution
+        assert all(s.shard_mode is None for s in steps)
+
+    def test_iter_groups_batches_consecutive_ids(self):
+        steps = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel=2)
+        batches = list(iter_groups(steps))
+        assert [len(b) for b in batches] == [2, 1]
+        seq = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig")
+        assert [len(b) for b in iter_groups(seq)] == [1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# Grouped DP vs brute force over order × solver × grouping
+# ---------------------------------------------------------------------------
+
+def _ordered_groupings(n, max_group):
+    """Every sequence of disjoint groups covering {0..n-1} (group execution
+    order matters; membership within a group does not)."""
+    def rec(remaining):
+        if not remaining:
+            yield ()
+            return
+        rem = sorted(remaining)
+        for size in range(1, min(max_group, len(rem)) + 1):
+            for g in itertools.combinations(rem, size):
+                for rest in rec(remaining - set(g)):
+                    yield (g,) + rest
+    return rec(set(range(n)))
+
+
+def _initial_state_peaks(shape, ranks, n_shards, max_group=3):
+    """Modeled peak of every first transition (singleton or group) out of
+    the un-shrunk state — the candidates a cap must beat to be feasible."""
+    n = len(shape)
+    peaks = []
+    for grouping in _ordered_groupings(n, max_group):
+        g = grouping[0]
+        if len(g) == 1:
+            peaks += [p for _, p, *_ in _priced_candidates(
+                shape, ranks, None, 4, n_shards, list(shape), g[0])]
+        else:
+            peaks += [p for *_, p in _price_group(
+                shape, ranks, None, 5, 4, n_shards, list(shape), g,
+                DEFAULT_COST_MODEL)]
+    return peaks
+
+
+def brute_force_grouped(shape, ranks, *, methods=None, als_iters=5,
+                        itemsize=4, n_shards=1, cap=None,
+                        cm=DEFAULT_COST_MODEL, max_group=None):
+    """Reference search: enumerate every ordered grouping × per-member
+    solver assignment, priced through the SAME candidate generators the DP
+    uses (the DP's recursion is what is under test, not the pricing)."""
+    n = len(shape)
+    if max_group is None:
+        max_group = n
+    best = None
+    for grouping in _ordered_groupings(n, max_group):
+        cur, lat_total, fl_total, ok = list(shape), 0.0, 0.0, True
+        meths: list[str] = []
+        for g in grouping:
+            if len(g) == 1:
+                cands = [(meth, peak,
+                          step_cost(cm, meth, i, r, j, als_iters))
+                         for meth, peak, i, r, j in _priced_candidates(
+                             shape, ranks, methods, itemsize, n_shards,
+                             cur, g[0])
+                         if cap is None or peak <= cap]
+                if not cands:
+                    ok = False
+                    break
+                meth, _, c = min(cands, key=lambda t: t[2])
+                lat_total += c
+                fl_total += c
+                meths.append(meth)
+            else:
+                cands = [(assign, lat, fl)
+                         for assign, lat, fl, peak in _price_group(
+                             shape, ranks, methods, als_iters, itemsize,
+                             n_shards, cur, g, cm)
+                         if cap is None or peak <= cap]
+                if not cands:
+                    ok = False
+                    break
+                assign, lat, fl = min(cands, key=lambda t: (t[1], t[2]))
+                lat_total += lat
+                fl_total += fl
+                meths.extend(assign)
+            for m in g:
+                cur[m] = ranks[m]
+        if ok and (best is None or
+                   (lat_total, fl_total) < (best[0], best[1])):
+            best = (lat_total, fl_total, grouping, tuple(meths))
+    return best
+
+
+class TestGroupedDP:
+    SHAPES = [((32, 32, 32), (4, 4, 4)),
+              ((64, 16, 16), (4, 4, 4)),
+              ((30, 8, 22), (3, 6, 4)),
+              ((24, 40, 16), (4, 5, 6))]
+
+    @pytest.mark.parametrize("shape,ranks", SHAPES)
+    @pytest.mark.parametrize("n_shards", [1, 8])
+    def test_matches_brute_force(self, shape, ranks, n_shards):
+        search = optimize_schedule(shape, ranks, n_shards=n_shards,
+                                   max_group=3)
+        ref = brute_force_grouped(shape, ranks, n_shards=n_shards)
+        assert math.isclose(search.total_cost, ref[0], rel_tol=1e-9)
+
+    @pytest.mark.parametrize("frac", [0.3, 0.6, 0.9, 1.2])
+    def test_cap_feasibility_and_totals_agree(self, frac):
+        shape, ranks, n_shards = (64, 16, 16), (4, 4, 4), 8
+        cap = int(max(_initial_state_peaks(shape, ranks, n_shards)) * frac)
+        ref = brute_force_grouped(shape, ranks, n_shards=n_shards, cap=cap)
+        if ref is None:
+            with pytest.raises(MemoryCapError):
+                optimize_schedule(shape, ranks, n_shards=n_shards,
+                                  max_group=3, memory_cap_bytes=cap)
+        else:
+            search = optimize_schedule(shape, ranks, n_shards=n_shards,
+                                       max_group=3, memory_cap_bytes=cap)
+            assert math.isclose(search.total_cost, ref[0], rel_tol=1e-9)
+
+    def test_max_group_one_is_exactly_the_sequential_dp(self):
+        for shape, ranks in self.SHAPES:
+            seq = optimize_schedule(shape, ranks, n_shards=8)
+            one = optimize_schedule(shape, ranks, n_shards=8, max_group=1)
+            assert (one.order, one.methods, one.total_cost) == \
+                (seq.order, seq.methods, seq.total_cost)
+            assert all(len(g) == 1 for g in one.groups)
+
+    def test_sequential_wins_exact_ties(self):
+        # lexicographic (latency, flops): a group that merely TIES the
+        # sequential latency must not displace it, because groups always
+        # carry more total work (sum vs the telescoped sequential FLOPs)
+        best = {}
+        _relax(best, 1, 10.0, 5.0, 0, (0,), ("eig",))
+        _relax(best, 1, 10.0, 7.0, 0, (0, 1), ("eig", "eig"))
+        assert best[1][3] == (0,)            # equal latency, more flops: no
+        _relax(best, 1, 10.0, 4.0, 0, (0, 1), ("eig", "als"))
+        assert best[1][3] == (0, 1)          # equal latency, fewer flops
+        _relax(best, 1, 9.0, 99.0, 0, (1,), ("als",))
+        assert best[1][:2] == (9.0, 99.0)    # lower latency always wins
+
+    def test_cap_forces_group_split(self):
+        shape, ranks, n_shards = (32, 32, 32), (4, 4, 4), 8
+        free = optimize_schedule(shape, ranks, methods=["eig"] * 3,
+                                 n_shards=n_shards, max_group=3)
+        assert any(len(g) == 3 for g in free.groups)
+        # the all-modes group runs replicated; cap it out while leaving
+        # sequential (sharded) steps and 2-groups feasible
+        full_peak = next(
+            peak for _, _, _, peak in _price_group(
+                shape, ranks, ["eig"] * 3, 5, 4, n_shards, list(shape),
+                (0, 1, 2), DEFAULT_COST_MODEL))
+        capped = optimize_schedule(shape, ranks, methods=["eig"] * 3,
+                                   n_shards=n_shards, max_group=3,
+                                   memory_cap_bytes=full_peak - 1)
+        assert all(len(g) < 3 for g in capped.groups)
+        steps = resolve_schedule(shape, ranks, methods="eig",
+                                 backend="sharded", n_shards=n_shards,
+                                 mode_order="opt", mode_parallel="auto",
+                                 memory_cap_bytes=full_peak - 1)
+        assert all(s.peak_bytes <= full_peak - 1 for s in steps)
+
+    def test_infeasible_cap_names_binding_group(self):
+        shape, ranks, n_shards = (4, 4, 4096), (2, 2, 2), 1
+        # cap below EVERY first transition: the search is dead at mask 0 and
+        # the min-peak candidate there is the (0, 1) group — its shared
+        # un-shrunk input beats any singleton's separate in+out slabs
+        cap = min(_initial_state_peaks(shape, ranks, n_shards)) - 1
+        with pytest.raises(MemoryCapError) as ei:
+            optimize_schedule(shape, ranks, max_group=3,
+                              memory_cap_bytes=cap)
+        msg = str(ei.value)
+        assert "is infeasible" in msg
+        # on this shape the min-peak candidate IS a multi-mode group (the
+        # shared-input model beats any singleton's in+out slabs), so the
+        # error names the group
+        assert "binding group — modes" in msg
+
+    def test_sequential_infeasible_message_unchanged(self):
+        # max_group=1 keeps the historical binding-STEP phrasing
+        with pytest.raises(MemoryCapError, match="binding step — mode"):
+            optimize_schedule((30, 8, 22), (3, 6, 4), memory_cap_bytes=100)
+
+    def test_optimize_grouping_fixed_order(self):
+        shape, ranks, n_shards = (64, 16, 16), (4, 4, 4), 8
+        order = (2, 1, 0)
+        search = optimize_grouping(shape, ranks, order, n_shards=n_shards)
+        assert search.order == order
+        assert tuple(m for g in search.groups for m in g) == order
+        # reference: contiguous segmentations of the fixed order only
+        best = None
+        for grouping in _segmentations(order):
+            cur, lat, fl, ok = list(shape), 0.0, 0.0, True
+            for g in grouping:
+                if len(g) == 1:
+                    cs = [(step_cost(DEFAULT_COST_MODEL, meth, i, r, j, 5))
+                          for meth, _, i, r, j in _priced_candidates(
+                              shape, ranks, None, 4, n_shards, cur, g[0])]
+                    c = min(cs)
+                    lat += c
+                    fl += c
+                else:
+                    cs = [(l, f) for _, l, f, _ in _price_group(
+                        shape, ranks, None, 5, 4, n_shards, cur, g,
+                        DEFAULT_COST_MODEL)]
+                    l, f = min(cs)
+                    lat += l
+                    fl += f
+                for m in g:
+                    cur[m] = ranks[m]
+            if ok and (best is None or (lat, fl) < best):
+                best = (lat, fl)
+        assert math.isclose(search.total_cost, best[0], rel_tol=1e-9)
+
+    def test_grouping_respects_cap(self):
+        shape, ranks = (32, 32, 32), (4, 4, 4)
+        full_peak = next(peak for *_, peak in _price_group(
+            shape, ranks, ["eig"] * 3, 5, 4, 8, list(shape), (0, 1, 2),
+            DEFAULT_COST_MODEL))
+        search = optimize_grouping(shape, ranks, (0, 1, 2),
+                                   methods=["eig"] * 3, n_shards=8,
+                                   memory_cap_bytes=full_peak - 1)
+        assert all(len(g) < 3 for g in search.groups)
+
+
+def _segmentations(order):
+    n = len(order)
+    for cuts in itertools.product([0, 1], repeat=n - 1):
+        grouping, start = [], 0
+        for i, c in enumerate(cuts, start=1):
+            if c:
+                grouping.append(tuple(order[start:i]))
+                start = i
+        grouping.append(tuple(order[start:]))
+        yield grouping
+
+
+# ---------------------------------------------------------------------------
+# Plan plumbing: config serde, plan JSON, cache key, describe, peak model
+# ---------------------------------------------------------------------------
+
+class TestPlanPlumbing:
+    def test_config_roundtrip_and_validation(self):
+        for mp in ("off", "auto", 2):
+            c = TuckerConfig(ranks=(2, 2, 2), methods="eig",
+                             mode_parallel=mp)
+            assert TuckerConfig.from_dict(c.to_dict()).mode_parallel == mp
+        # legacy configs (no key) default sequential
+        d = TuckerConfig(ranks=(2, 2, 2), methods="eig").to_dict()
+        del d["mode_parallel"]
+        assert TuckerConfig.from_dict(d).mode_parallel == "off"
+        for bad in ("on", 0, True, 1.5):
+            with pytest.raises(ValueError):
+                TuckerConfig(ranks=(2, 2, 2), mode_parallel=bad)
+
+    def test_modestep_roundtrip_keeps_group(self):
+        steps = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel=2)
+        for s in steps:
+            assert ModeStep.from_dict(s.to_dict()) == s
+        # pre-mode-parallel plan files load as sequential steps
+        d = steps[0].to_dict()
+        del d["group"]
+        assert ModeStep.from_dict(d).group is None
+
+    def test_plan_single_device_auto_is_silent_int_is_loud(self):
+        p = plan((16, 16, 16), jnp.float32,
+                 TuckerConfig(ranks=(4, 4, 4), methods="eig",
+                              mode_parallel="auto"))
+        assert all(s.group is None for s in p.schedule)
+        with pytest.raises(ValueError, match="mesh"):
+            plan((16, 16, 16), jnp.float32,
+                 TuckerConfig(ranks=(4, 4, 4), methods="eig",
+                              mode_parallel=2))
+
+    def _grouped_plan(self):
+        cfg = TuckerConfig(ranks=(4, 4, 4), methods="eig", mode_parallel=2)
+        steps = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                                 backend="sharded", n_shards=8,
+                                 mode_parallel=2)
+        return TuckerPlan(shape=(64, 16, 16), dtype="float32", config=cfg,
+                          schedule=steps)
+
+    def test_plan_json_roundtrip_keeps_groups(self):
+        p = self._grouped_plan()
+        p2 = TuckerPlan.from_json(p.to_json())
+        assert p2.schedule == p.schedule
+        assert [s.group for s in p2.schedule] == [0, 0, None]
+        assert p2.config.mode_parallel == 2
+
+    def test_cache_key_distinguishes_grouping(self):
+        p = self._grouped_plan()
+        seq = resolve_schedule((64, 16, 16), (4, 4, 4), methods="eig",
+                               backend="sharded", n_shards=8)
+        ps = TuckerPlan(shape=(64, 16, 16), dtype="float32",
+                        config=p.config, schedule=seq)
+        assert p._cache_key(False) != ps._cache_key(False)
+
+    def test_describe_marks_groups(self):
+        text = self._grouped_plan().describe()
+        assert "∥group=0" in text
+        assert "mode_parallel=2" in text
+
+    def test_peak_bytes_charges_dead_input_after_the_leading_group(self):
+        p = self._grouped_plan()   # backend "sharded" → never donates
+        assert not p.donates
+        steps = p.schedule
+        k0_peak = max(s.peak_bytes for s in steps[:2])
+        tail = max(s.peak_bytes + p.input_bytes for s in steps[2:])
+        assert p.peak_bytes == max(k0_peak, tail)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end parity on 8 virtual devices (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_mode_parallel_matches_sequential_all_solvers_and_dtypes():
+    """Acceptance: mode-parallel execution is numerically equal (existing
+    parity tolerances) to the sequential sweep for eig/als × fp32/bf16,
+    covering replicated groups, sharded groups (fused Gram psum + fused
+    multi-TTM), and mixed-solver groups."""
+    run_in_subprocess("""
+        from repro.core import TuckerConfig, plan, tensor_ops as T
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+
+        def lowrank(dims, ranks):
+            G = rng.standard_normal(ranks)
+            Us = [np.linalg.qr(rng.standard_normal((d, r)))[0]
+                  for d, r in zip(dims, ranks)]
+            return T.reconstruct(jnp.asarray(G, jnp.float32),
+                                 [jnp.asarray(u, jnp.float32) for u in Us])
+
+        cases = [((32, 32, 32), "auto"),   # replicated all-modes group
+                 ((64, 16, 16), 2),        # sharded leading group
+                 ((64, 16, 16), "auto")]
+        for dims, mp in cases:
+            X32 = lowrank(dims, (4, 4, 4))
+            for dt, tol in ((jnp.float32, 2e-3), (jnp.bfloat16, 3e-2)):
+                X = X32.astype(dt)
+                for methods in ("eig", "als"):
+                    ref = plan(X.shape, X.dtype,
+                               TuckerConfig(ranks=(4, 4, 4),
+                                            methods=methods)).execute(X)
+                    p = plan(X.shape, X.dtype,
+                             TuckerConfig(ranks=(4, 4, 4), methods=methods,
+                                          impl="sharded", mesh=mesh,
+                                          mode_parallel=mp))
+                    assert any(s.group is not None for s in p.schedule), \
+                        (dims, mp, methods, p.schedule)
+                    res = p.execute(X)
+                    a = np.asarray(res.tucker.reconstruct(), np.float32)
+                    b = np.asarray(ref.tucker.reconstruct(), np.float32)
+                    np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+                    # factor subspace parity, sign/rotation-invariant
+                    for u, v in zip(res.tucker.factors, ref.tucker.factors):
+                        u32 = u.astype(jnp.float32)
+                        v32 = v.astype(jnp.float32)
+                        d = float(jnp.abs(u32 @ u32.T - v32 @ v32.T).max())
+                        assert d < (1e-3 if dt == jnp.float32 else 3e-2), \
+                            (dims, mp, methods, dt, d)
+        # mixed-solver group: eig and als members share one group
+        X = lowrank((64, 16, 16), (4, 4, 4))
+        ref = plan(X.shape, X.dtype,
+                   TuckerConfig(ranks=(4, 4, 4),
+                                methods=("eig", "als", "eig"))).execute(X)
+        p = plan(X.shape, X.dtype,
+                 TuckerConfig(ranks=(4, 4, 4), methods=("eig", "als", "eig"),
+                              impl="sharded", mesh=mesh, mode_parallel=2))
+        assert [s.group for s in p.schedule] == [0, 0, None]
+        res = p.execute(X)
+        np.testing.assert_allclose(np.asarray(res.tucker.reconstruct()),
+                                   np.asarray(ref.tucker.reconstruct()),
+                                   rtol=2e-3, atol=2e-3)
+        print("OK")
+    """)
+
+
+def test_mode_parallel_plan_reuse_zero_recompile():
+    run_in_subprocess("""
+        from repro.core import TuckerConfig, plan
+        from repro.core import api as api_mod
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(1)
+        X = jnp.asarray(rng.standard_normal((64, 16, 16)), jnp.float32)
+        api_mod.clear_sweep_cache()
+        cfg = TuckerConfig(ranks=(4, 4, 4), methods="eig", impl="sharded",
+                           mesh=mesh, mode_parallel=2)
+        p = plan(X.shape, X.dtype, cfg)
+        for i in range(3):
+            p.execute(X + float(i))
+        assert api_mod.CACHE_STATS == {"builds": 1, "hits": 2, "traces": 1}, \
+            api_mod.CACHE_STATS
+        # a re-built plan (same config) shares the compiled sweep
+        plan(X.shape, X.dtype, cfg).execute(X)
+        assert api_mod.CACHE_STATS["builds"] == 1, api_mod.CACHE_STATS
+        # the sequential plan is a DIFFERENT compiled program
+        p_seq = plan(X.shape, X.dtype,
+                     TuckerConfig(ranks=(4, 4, 4), methods="eig",
+                                  impl="sharded", mesh=mesh))
+        p_seq.execute(X)
+        assert api_mod.CACHE_STATS["builds"] == 2, api_mod.CACHE_STATS
+        print("OK")
+    """)
+
+
+def test_distributed_wrapper_takes_mode_parallel():
+    run_in_subprocess("""
+        from repro.core.distributed import sthosvd_distributed
+        from repro.core import tensor_ops as T
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(2)
+        G = jnp.asarray(rng.standard_normal((4, 4, 4)), jnp.float32)
+        Us = [jnp.asarray(np.linalg.qr(rng.standard_normal((d, 4)))[0],
+                          jnp.float32) for d in (64, 16, 16)]
+        X = T.reconstruct(G, Us)   # exact rank-(4,4,4): both sweeps recover it
+        seq = sthosvd_distributed(X, (4, 4, 4), mesh, methods="eig")
+        par = sthosvd_distributed(X, (4, 4, 4), mesh, methods="eig",
+                                  mode_parallel=2)
+        assert all(t.seconds > 0 for t in par.trace)
+        e1 = float(seq.tucker.rel_error(X))
+        e2 = float(par.tucker.rel_error(X))
+        assert e1 < 1e-4 and e2 < 1e-4, (e1, e2)
+        print("OK")
+    """)

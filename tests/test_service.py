@@ -428,3 +428,58 @@ class TestLaneBounding:
         # one cached jitted sweep, TWO traced programs (4- and 8-lane
         # batches); without lane fill every n would trace its own
         assert CACHE_STATS["traces"] - before == 2
+
+
+# ---------------------------------------------------------------------------
+# cross-wave pipelining
+# ---------------------------------------------------------------------------
+class TestPipelining:
+    def test_inflight_depth_validated(self):
+        for bad in (0, -1):
+            with pytest.raises(ValueError):
+                TuckerService(max_inflight_waves=bad)
+
+    def test_stats_expose_depth_and_occupancy(self):
+        svc = TuckerService(max_inflight_waves=3)
+        t = svc.submit(tensor((8, 8, 8)), CFG)
+        svc.drain()
+        s = svc.stats()
+        assert s["max_inflight_waves"] == 3
+        (snap,) = s["buckets"].values()
+        assert {"pipelined_waves", "pipeline_occupancy",
+                "avg_inflight"} <= snap.keys()
+        # a single wave has nothing to overlap with
+        assert snap["pipelined_waves"] == 0
+        assert snap["pipeline_occupancy"] == 0.0
+        assert svc.poll(t) is not None
+
+    def _run(self, depth, n=6):
+        # wave_slots=2 forces ceil(n/2) waves out of one bucket
+        svc = TuckerService(policy=BucketPolicy(grid=1, wave_slots=2,
+                                                lane_pow2=False),
+                            max_inflight_waves=depth)
+        ts = [svc.submit(tensor((8, 8, 8), seed=s), CFG) for s in range(n)]
+        svc.drain()
+        res = [svc.poll(t) for t in ts]
+        assert all(r is not None for r in res)
+        return svc, res
+
+    def test_serial_and_pipelined_results_bitwise_equal(self):
+        _, serial = self._run(depth=1)
+        _, piped = self._run(depth=3)
+        for a, b in zip(serial, piped):
+            assert bitwise_equal(a, b)
+
+    def test_pipelined_waves_counted(self):
+        svc1, _ = self._run(depth=1)
+        (snap1,) = svc1.stats()["buckets"].values()
+        assert snap1["waves"] == 3
+        assert snap1["pipelined_waves"] == 0      # depth 1 = serial dispatch
+        assert snap1["avg_inflight"] == 0.0
+
+        svc3, _ = self._run(depth=3)
+        (snap3,) = svc3.stats()["buckets"].values()
+        assert snap3["waves"] == 3
+        assert snap3["pipelined_waves"] >= 1      # later waves overlapped
+        assert 0.0 < snap3["pipeline_occupancy"] <= 1.0
+        assert snap3["avg_inflight"] > 0.0

@@ -423,3 +423,51 @@ class TestShardedScheduleSearch:
             else:
                 raise AssertionError("cap should have been infeasible")
         """)
+
+
+# ---------------------------------------------------------------------------
+# Plan derivation (for_shape) on sharded plans — the serve-layer reuse hook
+# ---------------------------------------------------------------------------
+
+def test_for_shape_rederives_sharded_plans():
+    run_in_subprocess("""
+        from repro.core import TuckerConfig, mesh_spec, plan
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(4)
+        base = plan((24, 40, 16), jnp.float32,
+                    TuckerConfig(ranks=(4, 5, 6), methods="eig",
+                                 impl="sharded", mesh=mesh))
+        assert [s.shard_mode for s in base.schedule] == [1, 2, None]
+
+        # derived plan keeps the mesh and matches a direct plan exactly
+        d = base.for_shape((24, 40, 15))
+        assert mesh_spec(d.config.mesh) == mesh_spec(mesh)
+        direct = plan((24, 40, 15), jnp.float32, base.config)
+        assert d.schedule == direct.schedule
+        assert d.backend == "sharded"
+
+        # shard participation RE-resolves for the new dims: with mode 0
+        # already shrunk to rank 4, neither 4 nor 15 divides over the 8
+        # devices, so the mode-1 solve replicates instead of sharding mode 2
+        assert [s.shard_mode for s in d.schedule] == [1, None, None]
+
+        X = jnp.asarray(rng.standard_normal((24, 40, 15)), jnp.float32)
+        r1, r2 = d.execute(X), direct.execute(X)
+        np.testing.assert_allclose(np.asarray(r1.tucker.core),
+                                   np.asarray(r2.tucker.core),
+                                   rtol=1e-5, atol=1e-5)
+
+        # keep_methods pins the bucket plan's solvers and sweep order
+        auto = plan((24, 40, 16), jnp.float32,
+                    TuckerConfig(ranks=(4, 5, 6), methods=("als", "eig",
+                                                           "als"),
+                                 impl="sharded", mesh=mesh))
+        pinned = auto.for_shape((24, 40, 15), keep_methods=True)
+        assert pinned.methods == auto.methods
+        assert [s.mode for s in pinned.schedule] == \\
+            [s.mode for s in auto.schedule]
+
+        # same-shape derivation is the identity (no replanning)
+        assert base.for_shape((24, 40, 16)) is base
+        print("OK")
+    """)
