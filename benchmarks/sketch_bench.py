@@ -1,0 +1,131 @@
+"""Randomized-sketch vs fixed-rank eig bench: the rank-adaptive payoff.
+
+For each asymmetric case the bench plans an error-targeted job
+(``TuckerConfig(error_target=ε, methods="rand")``), executes it — the
+sketch pass resolves per-mode ranks AND produces the decomposition — and
+then plans a fixed-rank EIG sweep at exactly the ranks the policy chose,
+so both arms land at (essentially) the same achieved reconstruction error.
+Timing the two at equal accuracy answers the acceptance question directly:
+does the matricization-free sketch (linear in I_n) beat the eig sweep
+(quadratic Gram in I_n) once the big-mode shapes arrive?  The adaptive arm
+is timed END TO END — rank resolution included — while the eig arm gets
+its best case, the cached compiled sweep.
+
+A second row family checks the error contract: for a grid of targets ε the
+achieved error and the certified bound (``SthosvdResult.error_bound``)
+must both sit at or below ε.
+
+Usage:  python -m benchmarks.sketch_bench [--full | --smoke]
+                                          [--out BENCH_sketch.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TuckerConfig, plan
+
+from .common import emit, lowrank_tensor, time_call
+
+# one huge mode + small true ranks: where the sketch's linear-in-I_n range
+# finder dominates eig's I_n² Gram.  smoke = CI-sized, full = paper-adjacent
+CASES = {
+    "smoke": [((240, 48, 32), (10, 6, 5)),
+              ((32, 200, 24), (5, 8, 4))],
+    "default": [((600, 80, 40), (12, 8, 6)),
+                ((96, 512, 48), (10, 14, 8)),
+                ((720, 48, 64), (16, 6, 10))],
+    "full": [((1200, 160, 80), (16, 12, 8)),
+             ((160, 1024, 96), (12, 20, 10)),
+             ((1536, 96, 128), (24, 8, 16))],
+}
+
+ERROR_GRID = (0.02, 0.05, 0.1)
+
+
+def bench_sketch(tier: str = "default", reps: int = 3) -> list[dict]:
+    rows: list[dict] = []
+    for dims, true_ranks in CASES[tier]:
+        tag = "x".join(map(str, dims))
+        x = lowrank_tensor(dims, true_ranks, noise=0.01)
+        eps = 0.05
+
+        p_rand = plan(x.shape, x.dtype,
+                      TuckerConfig(error_target=eps, methods="rand",
+                                   mode_order="opt"))
+        res = p_rand.execute(x)
+        chosen = res.tucker.ranks
+        rand_err = float(res.tucker.rel_error(x))
+        t_rand = time_call(lambda: p_rand.execute(x).tucker.core, reps=reps)
+
+        p_eig = plan(x.shape, x.dtype,
+                     TuckerConfig(ranks=chosen, methods="eig",
+                                  mode_order="opt", donate_input=False))
+        eig_err = float(p_eig.execute(x).tucker.rel_error(x))
+        t_eig = time_call(lambda: p_eig.execute(x).tucker.core, reps=reps)
+
+        emit(f"sketch/adaptive/{tag}", t_rand,
+             f"ranks={chosen} err={rand_err:.4f} bound={res.error_bound:.4f}")
+        emit(f"sketch/eig_fixed/{tag}", t_eig, f"err={eig_err:.4f}")
+        rows.append({
+            "bench": "sketch_vs_eig", "shape": list(dims),
+            "error_target": eps, "ranks": list(chosen),
+            "us_per_call": t_rand * 1e6, "eig_us_per_call": t_eig * 1e6,
+            "rel_err": rand_err, "eig_rel_err": eig_err,
+            "error_bound": float(res.error_bound),
+            "speedup_vs_eig": t_eig / t_rand,
+            "rand_wins": t_rand < t_eig,
+            "within_target": rand_err <= eps and res.error_bound <= eps,
+        })
+
+    # error contract: achieved error and certified bound ≤ ε across targets
+    dims, true_ranks = CASES[tier][0]
+    x = lowrank_tensor(dims, true_ranks, noise=0.005)
+    for eps in ERROR_GRID:
+        p = plan(x.shape, x.dtype, TuckerConfig(error_target=eps,
+                                                methods="rand"))
+        res = p.execute(x)
+        err = float(res.tucker.rel_error(x))
+        ok = err <= eps and res.error_bound <= eps
+        emit(f"sketch/budget/{'x'.join(map(str, dims))}/eps={eps}", 0.0,
+             f"ranks={res.tucker.ranks} err={err:.4f} "
+             f"bound={res.error_bound:.4f} ok={ok}")
+        rows.append({"bench": "sketch_budget", "shape": list(dims),
+                     "error_target": eps,
+                     "ranks": list(res.tucker.ranks), "rel_err": err,
+                     "error_bound": float(res.error_bound),
+                     "within_target": ok})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-adjacent dims (minutes on 1 CPU core)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized dims (seconds; used by the schedule-opt "
+                    "CI tier)")
+    ap.add_argument("--out", default="BENCH_sketch.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+    tier = "full" if args.full else "smoke" if args.smoke else "default"
+    print("name,us_per_call,derived")
+    rows = bench_sketch(tier=tier)
+    bad = [r for r in rows if not r["within_target"]]
+    if args.out:
+        doc = {"bench": "sketch", "platform": jax.default_backend(),
+               "host": _platform.node(), "tier": tier, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+    if bad:
+        raise SystemExit(f"error budget violated in {len(bad)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,6 +64,22 @@ def main():
     print("\ndistributed == single-device ✓ "
           "(Gram partials psum'd over the mesh; factors bit-identical per device)")
 
+    # rank-adaptive front end to a sharded job: sketch ranks on one device
+    # (adaptive plans run replicated — the sketch has no collective path),
+    # then plan the fixed-rank SHARDED sweep at the resolved ranks
+    eps = 0.05
+    probe = plan(x.shape, x.dtype, TuckerConfig(error_target=eps,
+                                                methods="rand"))
+    chosen, bound = probe.resolve_ranks(x)
+    scfg = TuckerConfig(ranks=chosen, methods="auto", impl="sharded",
+                        mesh=mesh)
+    sres = plan(x.shape, x.dtype, scfg).execute(x)
+    serr = float(sres.tucker.rel_error(x))
+    print(f"error_target={eps}: sketch chose ranks {chosen} "
+          f"(bound={bound:.4f}); sharded sweep at those ranks "
+          f"rel_err={serr:.4f}")
+    assert serr <= eps, f"achieved error {serr} exceeds target {eps}"
+
 
 if __name__ == "__main__":
     main()

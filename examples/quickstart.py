@@ -87,7 +87,20 @@ def main():
               f"rel_err={float(r.tucker.rel_error(x)):.4f}   "
               f"modes={'|'.join(f'{t.mode}:{t.method}' for t in sorted(r.trace, key=lambda t: t.mode))}")
 
-    # 5. plans are JSON — ship a schedule tuned on one box to another
+    # 5. error-targeted decomposition: no ranks — ask for an accuracy and
+    # let the plan's rank policy read per-mode ranks off a randomized
+    # sketch of the input (then refine with the usual eig/als sweep)
+    eps = 0.05
+    acfg = TuckerConfig(error_target=eps)
+    ap_ = plan(x.shape, x.dtype, acfg)
+    ares = ap_.execute(x)
+    aerr = float(ares.tucker.rel_error(x))
+    print(f"\nerror_target={eps}   chose ranks {ares.tucker.ranks}   "
+          f"rel_err={aerr:.4f}   certified bound={ares.error_bound:.4f}")
+    assert aerr <= eps, f"achieved error {aerr} exceeds target {eps}"
+    assert ares.error_bound <= eps
+
+    # 6. plans are JSON — ship a schedule tuned on one box to another
     blob = p.to_json()
     print(f"\nplan serializes to {len(blob)} bytes of JSON "
           f"(TuckerPlan.save / TuckerPlan.load)")

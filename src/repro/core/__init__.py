@@ -42,7 +42,8 @@ from .plan import ModeStep, resolve_schedule
 from .schedule_opt import (MemoryCapError, ScheduleSearch,
                            optimize_grouping, optimize_schedule)
 from .selector import Selector, default_selector, extract_features
-from .solvers import ALS, EIG, SVD, als_solve, eig_solve, svd_solve
+from .solvers import (ALS, EIG, RAND, SVD, als_solve, eig_solve, rand_sketch,
+                      rand_solve, svd_solve)
 from .sthosvd import (
     SthosvdResult,
     TuckerTensor,
@@ -53,7 +54,7 @@ from .sthosvd import (
 )
 
 __all__ = [
-    "ALS", "DEFAULT_COST_MODEL", "EIG", "SVD",
+    "ALS", "DEFAULT_COST_MODEL", "EIG", "RAND", "SVD",
     "CostModel", "MemoryCapError", "ModeStep", "OpsBackend",
     "ScheduleSearch", "Selector", "SthosvdResult",
     "TuckerConfig", "TuckerPlan", "TuckerTensor",
@@ -61,6 +62,7 @@ __all__ = [
     "default_selector", "eig_solve", "extract_features", "get_backend",
     "mesh_from_spec", "mesh_spec", "optimize_grouping",
     "optimize_schedule", "plan", "plan_lib",
+    "rand_sketch", "rand_solve",
     "register_backend", "resolve_backend", "resolve_schedule", "sthosvd",
     "sthosvd_als", "sthosvd_eig", "sthosvd_svd", "svd_solve", "tensor_ops",
     "variants",

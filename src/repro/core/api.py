@@ -17,6 +17,19 @@ repeated executes on same-shaped inputs cost zero recompiles and zero
 selector invocations.  Plans are JSON-serializable (``save``/``load``,
 mirroring ``Selector.save``) so a schedule tuned on one box can ship to
 another.
+
+Rank-ADAPTIVE plans trade fixed ranks for an error target:
+
+    cfg = TuckerConfig(error_target=0.05)        # ||X - X̂|| ≤ 0.05·||X||
+    p   = plan(x.shape, x.dtype, cfg)            # freezes a rank POLICY
+    res = p.execute(x)                           # sketches ranks, refines
+    res.tucker.ranks, res.error_bound            # what the policy chose
+
+The plan carries per-step candidate grids and equi-partitioned HOSVD
+budgets instead of ranks; execution reads each mode's rank off a
+randomized sketch (matricization-free, the same TTM/TTT/Gram kernels) and
+either ships the sketch factors directly (``methods="rand"``) or refines
+at the chosen ranks through the ordinary fixed-rank compiled path.
 """
 
 from __future__ import annotations
@@ -44,7 +57,7 @@ from .plan import (
     sweep_sthosvd,
     sweep_thosvd,
 )
-from .solvers import DEFAULT_ALS_ITERS
+from .solvers import DEFAULT_ALS_ITERS, DEFAULT_OVERSAMPLE, DEFAULT_POWER_ITERS
 from .sthosvd import ModeTrace, SthosvdResult, TuckerTensor
 
 PLAN_FORMAT_VERSION = 1
@@ -132,8 +145,28 @@ class TuckerConfig:
     max over group members, memory = shared input + concurrent scratches,
     under ``memory_cap_bytes``) and silently stays sequential on
     single-device plans.
+
+    ``error_target`` switches the plan RANK-ADAPTIVE (st-HOSVD only): pass a
+    target relative reconstruction error ε ∈ (0, 1) and ``ranks`` becomes
+    optional — the plan carries a rank POLICY instead of fixed ranks, and
+    execution reads each mode's rank off a randomized sketch
+    (:func:`repro.core.solvers.rand_sketch`): the smallest candidate whose
+    measured discarded energy fits the mode's equi-partitioned share
+    ``τ_n² = ε²·||X||²/N`` of the HOSVD bound ``||X − X̂||² ≤ Σ_n τ_n²``.
+    ``ranks``, when also given, caps the per-mode rank; ``rank_grid``
+    restricts the candidates — a flat int tuple is one shared ascending
+    grid for every mode, a tuple of tuples is per-mode (default: every rank
+    up to the cap).  ``methods`` then names the solver that REFINES the
+    decomposition at the chosen ranks through the ordinary fixed-rank
+    compiled path (``"auto"``/``"eig"``/``"als"`` …); ``methods="rand"``
+    skips refinement and ships the sketch's own factors — the fastest path,
+    still within ε.  ``oversample``/``power_iters`` tune the sketch
+    (ℓ = r + oversample columns, subspace-iteration count).
+
+    ``SthosvdResult.error_bound`` then reports the certified bound
+    ``sqrt(Σ_n tail_n)/||X||`` measured from the executed sketch.
     """
-    ranks: tuple[int, ...]
+    ranks: tuple[int, ...] | None = None
     variant: str = "sthosvd"
     methods: str | tuple[str, ...] = "auto"
     mode_order: tuple[int, ...] | str | None = None
@@ -146,9 +179,55 @@ class TuckerConfig:
     memory_cap_bytes: int | None = None
     donate_input: bool | None = None
     mode_parallel: str | int = "off"
+    error_target: float | None = None
+    rank_grid: tuple | None = None
+    oversample: int = DEFAULT_OVERSAMPLE
+    power_iters: int = DEFAULT_POWER_ITERS
 
     def __post_init__(self):
-        object.__setattr__(self, "ranks", tuple(int(r) for r in self.ranks))
+        if self.ranks is not None:
+            object.__setattr__(self, "ranks",
+                               tuple(int(r) for r in self.ranks))
+        elif self.error_target is None:
+            raise ValueError("TuckerConfig needs ranks=... (fixed-rank) or "
+                             "error_target=... (rank-adaptive)")
+        if self.error_target is not None:
+            object.__setattr__(self, "error_target", float(self.error_target))
+            if not 0.0 < self.error_target < 1.0:
+                raise ValueError(f"error_target={self.error_target} must be "
+                                 "a relative error in (0, 1)")
+            if self.variant != "sthosvd":
+                raise ValueError("error_target (rank-adaptive planning) "
+                                 "needs the sequential-shrink error "
+                                 "accounting of variant='sthosvd', got "
+                                 f"{self.variant!r}")
+            if self.mode_parallel != "off":
+                raise ValueError("rank-adaptive plans are sequential (the "
+                                 "per-mode budget check threads the shrink); "
+                                 "mode_parallel must stay 'off'")
+            if self.mesh is not None or self.impl == "sharded":
+                raise ValueError("rank-adaptive plans run replicated (the "
+                                 "sketch has no collective path); drop the "
+                                 "mesh / sharded impl, or resolve ranks "
+                                 "first and plan the fixed-rank sharded "
+                                 "sweep at the result")
+        if self.rank_grid is not None:
+            if self.error_target is None:
+                raise ValueError("rank_grid is part of the rank-adaptive "
+                                 "policy; set error_target=... too (for "
+                                 "fixed ranks pass ranks=...)")
+            rg = tuple(self.rank_grid)
+            if all(isinstance(g, int) for g in rg):
+                object.__setattr__(self, "rank_grid",
+                                   tuple(int(g) for g in rg))
+            else:
+                object.__setattr__(
+                    self, "rank_grid",
+                    tuple(tuple(int(r) for r in g) for g in rg))
+            if not rg:
+                raise ValueError("rank_grid must not be empty")
+        if self.oversample < 0 or self.power_iters < 0:
+            raise ValueError("oversample and power_iters must be >= 0")
         if not isinstance(self.methods, str):
             object.__setattr__(self, "methods", tuple(self.methods))
         if isinstance(self.mode_order, (list, tuple)):
@@ -206,24 +285,42 @@ class TuckerConfig:
             if self.mesh is not None else 1
 
     def to_dict(self) -> dict:
-        return {"ranks": list(self.ranks), "variant": self.variant,
-                "methods": (self.methods if isinstance(self.methods, str)
-                            else list(self.methods)),
-                "mode_order": (list(self.mode_order)
-                               if isinstance(self.mode_order, tuple)
-                               else self.mode_order),
-                "impl": self.impl, "als_iters": self.als_iters,
-                "hooi_iters": self.hooi_iters,
-                "compute_dtype": self.compute_dtype,
-                "mesh": mesh_spec(self.mesh),
-                "shard_axis": self.shard_axis,
-                "memory_cap_bytes": self.memory_cap_bytes,
-                "donate_input": self.donate_input,
-                "mode_parallel": self.mode_parallel}
+        d = {"ranks": None if self.ranks is None else list(self.ranks),
+             "variant": self.variant,
+             "methods": (self.methods if isinstance(self.methods, str)
+                         else list(self.methods)),
+             "mode_order": (list(self.mode_order)
+                            if isinstance(self.mode_order, tuple)
+                            else self.mode_order),
+             "impl": self.impl, "als_iters": self.als_iters,
+             "hooi_iters": self.hooi_iters,
+             "compute_dtype": self.compute_dtype,
+             "mesh": mesh_spec(self.mesh),
+             "shard_axis": self.shard_axis,
+             "memory_cap_bytes": self.memory_cap_bytes,
+             "donate_input": self.donate_input,
+             "mode_parallel": self.mode_parallel}
+        # rank-policy keys ride only on adaptive configs, so fixed-rank
+        # config JSON is byte-identical to what pre-rank-policy versions
+        # wrote (and they can still load it)
+        if self.error_target is not None:
+            d["error_target"] = self.error_target
+            d["rank_grid"] = (None if self.rank_grid is None else
+                              [list(g) if isinstance(g, tuple) else g
+                               for g in self.rank_grid])
+            d["oversample"] = self.oversample
+            d["power_iters"] = self.power_iters
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuckerConfig":
-        return cls(ranks=tuple(d["ranks"]), variant=d.get("variant", "sthosvd"),
+        rg = d.get("rank_grid")
+        if rg is not None:
+            rg = tuple(tuple(g) if isinstance(g, list) else int(g)
+                       for g in rg)
+        ranks = d["ranks"]
+        return cls(ranks=None if ranks is None else tuple(ranks),
+                   variant=d.get("variant", "sthosvd"),
                    methods=(d["methods"] if isinstance(d["methods"], str)
                             else tuple(d["methods"])),
                    mode_order=(tuple(d["mode_order"])
@@ -237,7 +334,11 @@ class TuckerConfig:
                    shard_axis=d.get("shard_axis"),
                    memory_cap_bytes=d.get("memory_cap_bytes"),
                    donate_input=d.get("donate_input"),
-                   mode_parallel=d.get("mode_parallel", "off"))
+                   mode_parallel=d.get("mode_parallel", "off"),
+                   error_target=d.get("error_target"),
+                   rank_grid=rg,
+                   oversample=d.get("oversample", DEFAULT_OVERSAMPLE),
+                   power_iters=d.get("power_iters", DEFAULT_POWER_ITERS))
 
 
 # ---------------------------------------------------------------------------
@@ -370,6 +471,14 @@ class TuckerPlan:
     select_seconds: float = 0.0     # one-time planning cost (selector calls)
 
     # -- introspection -------------------------------------------------------
+    @property
+    def is_adaptive(self) -> bool:
+        """True when this plan carries a rank POLICY (``error_target``)
+        instead of fixed ranks: steps are sized at their rank caps (the
+        conservative figure for memory modeling) and ``execute`` reads the
+        actual per-mode ranks off a randomized sketch of each input."""
+        return self.config.error_target is not None
+
     @property
     def backend(self) -> str:
         """The resolved ops backend this plan's steps run on (``config.impl``
@@ -528,6 +637,8 @@ class TuckerPlan:
             raise ValueError(f"plan is for shape {self.shape}, got {x.shape}")
         if str(x.dtype) != self.dtype:
             raise ValueError(f"plan is for dtype {self.dtype}, got {x.dtype}")
+        if self.is_adaptive:
+            return self._execute_adaptive(x, record=record)
         # sys.modules probe: plans that never meet repro.tune pay nothing
         tune = sys.modules.get("repro.tune")
         sink = tune.active_sink() if tune is not None else None
@@ -604,6 +715,157 @@ class TuckerPlan:
             tucker=TuckerTensor(core=core, factors=factors),
             trace=trace, select_overhead_s=0.0)
 
+    def resolve_ranks(self, x: jax.Array) -> tuple[tuple[int, ...], float]:
+        """Run ONLY the sketch pass on ``x``: the per-mode ranks the policy
+        chooses for this input plus the certified relative-error bound —
+        without building the decomposition.  Adaptive plans only."""
+        if not self.is_adaptive:
+            raise ValueError("resolve_ranks needs a rank-adaptive plan "
+                             "(TuckerConfig(error_target=...)); this plan's "
+                             f"ranks are fixed at {self.config.ranks}")
+        ranks, tails, *_ = self._sketch_pass(jnp.asarray(x))
+        return ranks, math.sqrt(sum(tails.values()))
+
+    def _sketch_pass(self, x: jax.Array):
+        """The rank-adaptive sweep core: sequential randomized sketches
+        (:func:`repro.core.solvers.rand_sketch`) in schedule order, reading
+        each mode's rank off its sketched eigenvalue tail.
+
+        Per step, the captured energy of a rank-r truncation of the current
+        tensor equals the sum of the top-r eigenvalues of the sketched Gram
+        — EXACT for the factor actually used, not an estimate — so the
+        smallest grid candidate whose discarded energy fits the step's
+        budget ``tau·||X||²`` is chosen (the grid cap when none fits).
+        ``||X||²`` is the energy measured at step 0, before anything was
+        truncated, which makes ``sqrt(Σ_n tail_n)`` of the recorded
+        fractional tails a guaranteed relative-error bound via the
+        sequential HOSVD inequality ``||X − X̂||² ≤ Σ_n τ_n²``.
+
+        The sketch width is INPUT-ADAPTIVE: each mode starts narrow and
+        doubles only while no candidate ≤ the current width meets the
+        budget (up to ``rank cap + oversample``).  A narrower sketch can
+        only under-capture — the measured tail of the factor it yields is
+        still exact — so widening never weakens the guarantee, and
+        well-compressible inputs never pay for the rank cap (without a
+        ``ranks``/``rank_grid`` hint the cap is the full mode dimension;
+        a full-width sketch there would erase the sketch's whole
+        linear-in-I_n advantage).  Doubling keeps total sketch work within
+        2× of the final width's.
+
+        Returns ``(ranks, tails, factors, core, seconds, js)``: per-mode
+        chosen ranks and fractional tails, the sketch's own orthonormal
+        factors, the shrunk core, per-step wall-clock, and the actual
+        (shrunk) J_n each step saw.
+        """
+        import time as _time
+
+        import numpy as np
+
+        from .backend import backend_ops
+        from .solvers import rand_sketch
+        cfg = self.config
+        if cfg.compute_dtype:
+            x = x.astype(jnp.dtype(cfg.compute_dtype))
+        wdtype = x.dtype
+        y = x
+        total = None
+        chosen: dict[int, int] = {}
+        tails: dict[int, float] = {}
+        factors: dict[int, jax.Array] = {}
+        seconds: list[float] = []
+        js: list[int] = []
+        for s in self.schedule:
+            t0 = _time.perf_counter()
+            js.append(int(y.size // y.shape[s.mode]))
+            width_cap = min(s.i_n, s.rank_grid[-1] + cfg.oversample)
+            width = min(width_cap, max(16, 2 * cfg.oversample,
+                                       s.rank_grid[0] + cfg.oversample))
+            while True:
+                q, b, evals, vecs, energy = rand_sketch(
+                    y, s.mode, width, power_iters=cfg.power_iters,
+                    impl=s.backend)
+                ev = np.maximum(np.asarray(evals, dtype=np.float64), 0.0)
+                energy = float(energy)
+                if total is None:
+                    total = energy or 1.0  # step 0: ||X||², the budget basis
+                csum = np.cumsum(ev[::-1])  # csum[r-1] = top-r captured
+                budget = s.tau * total
+                r = tail = None
+                for cand in s.rank_grid:    # ascending: smallest fit wins
+                    if cand > width:
+                        break
+                    t = max(energy - float(csum[cand - 1]), 0.0)
+                    if t <= budget:
+                        r, tail = cand, t
+                        break
+                if r is not None or width >= width_cap:
+                    break
+                width = min(2 * width, width_cap)
+            if r is None:   # no candidate fits even at the cap width: take
+                            # the largest grid rank the sketch can express
+                r = max(g for g in s.rank_grid if g <= width)
+                tail = max(energy - float(csum[r - 1]), 0.0)
+            chosen[s.mode], tails[s.mode] = int(r), tail / total
+            # top-r Ritz rotation of the range basis; shrink via the
+            # already-projected b — no second pass over the input
+            v = vecs[:, -r:][:, ::-1].astype(q.dtype)
+            u = jnp.dot(q, v, precision=jax.lax.Precision.HIGHEST)
+            factors[s.mode] = u.astype(wdtype)
+            ttm = backend_ops(s.backend)[0]
+            y = ttm(b, v.T, s.mode).astype(wdtype)
+            jax.block_until_ready(y)
+            seconds.append(_time.perf_counter() - t0)
+        ranks = tuple(chosen[m] for m in range(len(self.shape)))
+        return ranks, tails, factors, y, seconds, js
+
+    def _execute_adaptive(self, x: jax.Array, *,
+                          record: bool = False) -> SthosvdResult:
+        """Two-phase rank-adaptive execution (never donates — the original
+        input is read again by the refinement sweep).
+
+        Phase 1 resolves ranks per mode (:meth:`_sketch_pass`).  Phase 2:
+        with ``methods="rand"`` the sketch's own factors and shrunk core
+        ARE the result — the fastest path, certified by the measured bound;
+        any other ``methods`` re-plans at the chosen FIXED ranks and runs
+        the ordinary compiled eig/als sweep as refinement, with the sketch
+        cost reported as ``select_overhead_s`` and the measured per-mode
+        tails riding the refined trace as ``tail_err`` labels for the tune
+        store."""
+        cfg = self.config
+        xa = jnp.asarray(x)
+        ranks, tails, factors, core, seconds, js = self._sketch_pass(xa)
+        bound = math.sqrt(sum(tails.values()))
+        m = cfg.methods
+        sketch_only = m == "rand" or \
+            (not isinstance(m, str) and all(q == "rand" for q in m))
+        if not sketch_only:
+            rcfg = replace(cfg, ranks=ranks, error_target=None,
+                           rank_grid=None,
+                           mode_order=tuple(s.mode for s in self.schedule))
+            res = plan(self.shape, self.dtype, rcfg).execute(
+                xa, record=record, donate=False)
+            for t in res.trace:
+                t.tail_err = tails[t.mode]
+            return SthosvdResult(
+                tucker=res.tucker, trace=res.trace,
+                select_overhead_s=res.select_overhead_s + sum(seconds),
+                error_bound=bound)
+        n = len(self.shape)
+        trace = [ModeTrace(s.mode, "rand", s.i_n, ranks[s.mode], j, dt,
+                           backend=s.backend, predicted_s=s.predicted_s,
+                           tail_err=tails[s.mode])
+                 for s, j, dt in zip(self.schedule, js, seconds)]
+        tune = sys.modules.get("repro.tune")
+        sink = tune.active_sink() if tune is not None else None
+        if sink is not None:
+            sink.add_traces(trace, platform=jax.default_backend(),
+                            dtype=cfg.compute_dtype or self.dtype,
+                            order=n, als_iters=cfg.als_iters)
+        return SthosvdResult(
+            tucker=TuckerTensor(core=core,
+                                factors=[factors[mm] for mm in range(n)]),
+            trace=trace, select_overhead_s=0.0, error_bound=bound)
+
     def execute_batch(self, xs: jax.Array, *,
                       donate: bool | None = None) -> list[SthosvdResult]:
         """Decompose a fleet of same-shaped tensors (leading batch axis) with
@@ -623,7 +885,9 @@ class TuckerPlan:
                 f"plan is for batches of shape {self.shape}, got {xs.shape}")
         if str(xs.dtype) != self.dtype:
             raise ValueError(f"plan is for dtype {self.dtype}, got {xs.dtype}")
-        if self.backend == "sharded":
+        if self.backend == "sharded" or self.is_adaptive:
+            # adaptive: item by item — the policy may choose different
+            # ranks per tensor, so there is no one vmappable program
             return [self.execute(xs[b]) for b in range(xs.shape[0])]
         donate_now = self._resolve_donate(created=xs is not xin,
                                           override=donate)
@@ -668,7 +932,12 @@ class TuckerPlan:
         cfg = self.config
         if keep_methods:
             order = tuple(s.mode for s in self.schedule[:len(self.shape)])
-            cfg = replace(cfg, methods=self.methods, mode_order=order)
+            if self.is_adaptive:
+                # the policy IS the method; pin only the sweep order
+                # (config.methods stays the refinement solver choice)
+                cfg = replace(cfg, mode_order=order)
+            else:
+                cfg = replace(cfg, methods=self.methods, mode_order=order)
         return plan(shape, self.dtype, cfg, selector=selector)
 
     # -- reporting -----------------------------------------------------------
@@ -678,8 +947,10 @@ class TuckerPlan:
         totals, donation policy, and memory cap the plan was built under."""
         cfg = self.config
         cap = cfg.memory_cap_bytes
+        head = (f"error_target={cfg.error_target:g} (rank-adaptive)"
+                if self.is_adaptive else f"ranks {cfg.ranks}")
         lines = [
-            f"TuckerPlan {self.shape} {self.dtype} -> ranks {cfg.ranks} "
+            f"TuckerPlan {self.shape} {self.dtype} -> {head} "
             f"[{cfg.variant}, backend={self.backend}]",
             f"  mode_order={cfg.mode_order!r}  "
             + (f"mode_parallel={cfg.mode_parallel!r}  "
@@ -690,6 +961,12 @@ class TuckerPlan:
                "array is kept)" if self.donates and cfg.donate_input is None
                else f" (resolves: {'donated' if self.donates else 'undonated'})"),
         ]
+        if self.is_adaptive:
+            lines.append(
+                f"  rank policy: tau²={self.schedule[0].tau:.3g}·||X||² "
+                f"per mode  oversample={cfg.oversample}  "
+                f"power_iters={cfg.power_iters}  "
+                "(steps sized at grid caps; ranks resolve per input)")
         per_dev = any(s.n_shards > 1 for s in self.schedule)
         for k, s in enumerate(self.schedule):
             pred = f"  pred={s.predicted_s * 1e3:.3f}ms" if s.predicted_s \
@@ -697,11 +974,14 @@ class TuckerPlan:
             shard = f"  shard_mode={s.shard_mode}/{s.n_shards}" \
                 if per_dev else ""
             grp = f"  ∥group={s.group}" if s.group is not None else ""
+            pol = (f"  grid={s.rank_grid[0]}..{s.rank_grid[-1]}"
+                   f"({len(s.rank_grid)})"
+                   if s.rank_grid is not None else "")
             lines.append(
                 f"  step {k}: mode {s.mode} {s.method:>3s}  "
                 f"I={s.i_n} R={s.r_n} J={s.j_n}  "
                 f"flops={s.flops:.3g}  peak={s.peak_bytes:,}B"
-                f"{shard}{grp}{pred}")
+                f"{shard}{grp}{pol}{pred}")
         total_pred = self.total_predicted_s
         lines.append(
             f"  total: flops={self.total_flops:.3g}  "
@@ -750,6 +1030,88 @@ class TuckerPlan:
 # plan / decompose
 # ---------------------------------------------------------------------------
 
+def _resolve_rank_policy(shape: tuple[int, ...],
+                         config: TuckerConfig) -> tuple[tuple, tuple]:
+    """Per-mode candidate grids + sizing caps for a rank-adaptive config.
+
+    The cap (each step's ``r_n`` — what scratch/peak modeling and the
+    schedule DP see) is the largest candidate: ``ranks`` when given, else
+    the grid maximum, else the full mode dimension.  A flat int
+    ``rank_grid`` is one shared grid applied to every mode; a tuple of
+    tuples is per-mode.  Candidates are deduplicated, clamped to
+    ``[1, cap]``, and sorted ascending — the execute-time budget check
+    walks them smallest-first."""
+    n = len(shape)
+    rg = config.rank_grid
+    if rg is not None and all(isinstance(g, int) for g in rg):
+        rg = tuple(rg for _ in range(n))
+    if rg is not None and len(rg) != n:
+        raise ValueError(f"rank_grid has {len(rg)} mode entries for an "
+                         f"order-{n} tensor of shape {shape}")
+    if config.ranks is not None and len(config.ranks) != n:
+        raise ValueError(f"ranks {config.ranks} do not match order-{n} "
+                         f"shape {shape}")
+    grids = []
+    for m in range(n):
+        hi = shape[m] if config.ranks is None \
+            else max(1, min(int(config.ranks[m]), shape[m]))
+        if rg is None:
+            g = tuple(range(1, hi + 1))
+        else:
+            g = tuple(sorted({max(1, min(int(r), hi)) for r in rg[m]}))
+        grids.append(g)
+    return tuple(grids), tuple(g[-1] for g in grids)
+
+
+def _plan_adaptive(shape: tuple[int, ...], dtype,
+                   config: TuckerConfig) -> TuckerPlan:
+    """Rank-adaptive planning: freeze a rank POLICY, not ranks.
+
+    The schedule is sized at each mode's rank CAP (see
+    :func:`_resolve_rank_policy`) — the conservative figure for scratch
+    modeling and ``memory_cap_bytes`` — with every step pinned to the
+    ``rand`` sketch solver.  ``mode_order="opt"`` runs the schedule DP with
+    the rank grid as its third decision axis
+    (:func:`repro.core.schedule_opt.optimize_schedule`), so the sweep order
+    is chosen for the policy, not just the caps.  Each step then carries
+    its ``rank_grid`` and the equi-partitioned HOSVD budget share
+    ``tau = error_target²/N``; the actual ranks resolve per input at
+    execute time (:meth:`TuckerPlan._sketch_pass`)."""
+    import time as _time
+    n = len(shape)
+    compute_dtype = jnp.dtype(config.compute_dtype) if config.compute_dtype \
+        else dtype
+    backend = resolve_backend(config.impl, dtype=compute_dtype)
+    if not backend.supports_solver("rand"):
+        raise ValueError(f"backend {backend.name!r} cannot run the 'rand' "
+                         "sketch solver rank-adaptive plans are built on "
+                         f"(capabilities: {backend.solvers})")
+    grids, caps = _resolve_rank_policy(shape, config)
+    from .selector import default_selector
+    cost_model = default_selector(backend=backend.name).cost_model
+    t0 = _time.perf_counter()
+    mode_order = config.mode_order
+    if mode_order == "opt":
+        from .schedule_opt import optimize_schedule
+        mode_order = optimize_schedule(
+            shape, caps, methods=["rand"] * n, als_iters=config.als_iters,
+            itemsize=compute_dtype.itemsize, cost_model=cost_model,
+            memory_cap_bytes=config.memory_cap_bytes,
+            rank_grid=grids).order
+    schedule = resolve_schedule(
+        shape, caps, variant="sthosvd", methods="rand",
+        mode_order=mode_order, als_iters=config.als_iters,
+        itemsize=compute_dtype.itemsize, backend=backend.name,
+        n_shards=1, cost_model=cost_model,
+        memory_cap_bytes=config.memory_cap_bytes)
+    tau = float(config.error_target) ** 2 / n
+    schedule = tuple(replace(s, rank_grid=grids[s.mode], tau=tau)
+                     for s in schedule)
+    return TuckerPlan(shape=shape, dtype=str(dtype), config=config,
+                      schedule=schedule,
+                      select_seconds=_time.perf_counter() - t0)
+
+
 def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
          selector: Callable[..., str] | None = None) -> TuckerPlan:
     """Resolve ``config`` against a concrete (shape, dtype) → ``TuckerPlan``.
@@ -761,9 +1123,15 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
     resolves again.  With a mesh (``impl="sharded"``, or ``"auto"`` when
     one is attached) the shard-mode schedule is frozen here too: per-step
     shard choice, reshard points, and per-device ``peak_bytes``.
+
+    A config with ``error_target=`` routes to rank-ADAPTIVE planning
+    (:func:`_plan_adaptive`): the plan freezes a rank policy and sweep
+    order; per-mode ranks resolve per input at execute time.
     """
     shape = tuple(int(s) for s in shape)
     dtype = jnp.dtype(dtype)
+    if config.error_target is not None:
+        return _plan_adaptive(shape, dtype, config)
     compute_dtype = jnp.dtype(config.compute_dtype) if config.compute_dtype \
         else dtype
     backend = resolve_backend(config.impl, dtype=compute_dtype,

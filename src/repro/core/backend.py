@@ -78,6 +78,13 @@ class OpsBackend:
         True if the backend executes across a jax mesh: plans must carry one
         (``TuckerConfig(mesh=...)``), ``auto`` only selects it when a mesh is
         supplied, and per-step ``peak_bytes`` become per-device figures.
+    solvers
+        Solver families (``repro.core.solvers.SOLVERS`` names) whose kernel
+        mix this backend supports.  All four built-ins support the full set
+        — ``rand`` is built from the same TTM/TTT/Gram primitives — but a
+        custom backend that e.g. lacks a TTT can exclude ``als``/``rand``
+        here and plan-time validation (``plan._make_step``) rejects the
+        combination before anything compiles.
     """
     name: str
     loader: Callable[[], OpsTriple]
@@ -88,6 +95,7 @@ class OpsBackend:
     cost_scale: float = 1.0
     interpret_fallback: bool = False
     requires_mesh: bool = False
+    solvers: tuple[str, ...] = ("eig", "als", "svd", "rand")
     _ops: list = field(default_factory=list, repr=False, compare=False)
 
     def ops(self) -> OpsTriple:
@@ -98,6 +106,9 @@ class OpsBackend:
 
     def supports_dtype(self, dtype) -> bool:
         return "*" in self.dtypes or str(jnp.dtype(dtype)) in self.dtypes
+
+    def supports_solver(self, method: str) -> bool:
+        return "*" in self.solvers or method in self.solvers
 
     def native_on(self, platform: str) -> bool:
         return "*" in self.platforms or platform in self.platforms

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
-from .solvers import DEFAULT_ALS_ITERS
+from .solvers import DEFAULT_ALS_ITERS, DEFAULT_OVERSAMPLE, DEFAULT_POWER_ITERS
 
 #: model JSON schema version (bumped when the constant set changes)
 COST_MODEL_VERSION = 1
@@ -56,9 +56,21 @@ class CostModel:
     c_inv: float = 2.0
     eig_scale: float = 1.0
     als_scale: float = 1.0
+    rand_scale: float | None = None
     eig_overhead_s: float = 0.0
     als_overhead_s: float = 0.0
+    rand_overhead_s: float = 0.0
     source: str = "textbook"
+
+    @property
+    def rand_scale_eff(self) -> float:
+        """rand seconds-per-FLOP actually used for pricing: the fitted
+        value when a rand calibration exists, else eig's scale — the sketch
+        is the same GEMM-bound TTM/TTT/QR kernel mix, so eig's per-FLOP
+        rate is the closest proxy (and a calibrated model stays sane for
+        rand instead of falling back to 1 s/FLOP).  Textbook models degrade
+        to plain FLOP counts either way."""
+        return self.eig_scale if self.rand_scale is None else self.rand_scale
 
     # -- kernel counts -------------------------------------------------------
     def f_eig(self, n: int) -> float:
@@ -88,6 +100,23 @@ class CostModel:
         return per_iter * num_iters + 2.0 * j_n * r_n * r_n \
             + self.f_qr(i_n, r_n)
 
+    def rand_flops(self, i_n: int, r_n: int, j_n: int,
+                   oversample: int = DEFAULT_OVERSAMPLE,
+                   power_iters: int = DEFAULT_POWER_ITERS) -> float:
+        """Randomized range finder at sketch width ℓ = min(I_n, R_n + p):
+        range sample TTT (2 I_n ℓ J_n) + QR, per power iteration a
+        project-TTM + expand-TTT + QR (4 I_n ℓ J_n + QR), the final
+        projection TTM (2 I_n ℓ J_n), the ℓ×ℓ sketched Gram (ℓ² J_n) +
+        eig, and the ℓ→R_n core rotation (2 ℓ R_n J_n).  Linear in I_n
+        where EIG's Gram is quadratic — this is the whole point."""
+        ell = min(i_n, r_n + oversample)
+        sketch = 2.0 * i_n * ell * j_n + self.f_qr(i_n, ell)
+        power = power_iters * (4.0 * i_n * ell * j_n + self.f_qr(i_n, ell))
+        project = 2.0 * i_n * ell * j_n
+        ritz = float(ell) * ell * j_n + self.f_eig(ell) + i_n * ell * r_n
+        rotate = 2.0 * ell * r_n * j_n
+        return sketch + power + project + ritz + rotate
+
     def svd_flops(self, i_n: int, r_n: int, j_n: int) -> float:
         """Thin SVD of the I_n×J_n unfolding (Golub–Van Loan R-SVD count,
         2mn² + 11n³ with n = min dim) plus the Σ·Vᵀ core update.  Only used
@@ -110,22 +139,31 @@ class CostModel:
         if method == "als":
             return self.als_overhead_s \
                 + self.als_scale * self.als_flops(i_n, r_n, j_n, num_iters)
+        if method == "rand":
+            return self.rand_overhead_s \
+                + self.rand_scale_eff * self.rand_flops(i_n, r_n, j_n)
         # svd has no dedicated scale; the eig scale is the closest GEMM proxy
         return self.eig_scale * self.svd_flops(i_n, r_n, j_n)
 
     def predicted_best(self, i_n: int, r_n: int, j_n: int,
-                       num_iters: int = DEFAULT_ALS_ITERS) -> str:
-        """Analytic solver choice: smaller scaled cost wins."""
-        return "eig" if self.predict_seconds("eig", i_n, r_n, j_n) <= \
-            self.predict_seconds("als", i_n, r_n, j_n, num_iters) else "als"
+                       num_iters: int = DEFAULT_ALS_ITERS,
+                       methods: tuple = ("eig", "als")) -> str:
+        """Analytic solver choice over ``methods``: smallest scaled cost wins
+        (ties break toward the earlier entry, so the default keeps the
+        historical eig-on-tie behavior)."""
+        return min(methods, key=lambda m: (
+            self.predict_seconds(m, i_n, r_n, j_n, num_iters),
+            methods.index(m)))
 
     # -- persistence ---------------------------------------------------------
     def to_dict(self) -> dict:
         return {"version": COST_MODEL_VERSION, "c_eig": self.c_eig,
                 "c_qr": self.c_qr, "c_inv": self.c_inv,
                 "eig_scale": self.eig_scale, "als_scale": self.als_scale,
+                "rand_scale": self.rand_scale,
                 "eig_overhead_s": self.eig_overhead_s,
                 "als_overhead_s": self.als_overhead_s,
+                "rand_overhead_s": self.rand_overhead_s,
                 "source": self.source}
 
     @classmethod
@@ -135,8 +173,11 @@ class CostModel:
                    c_inv=float(d.get("c_inv", 2.0)),
                    eig_scale=float(d.get("eig_scale", 1.0)),
                    als_scale=float(d.get("als_scale", 1.0)),
+                   rand_scale=(None if d.get("rand_scale") is None
+                               else float(d["rand_scale"])),
                    eig_overhead_s=float(d.get("eig_overhead_s", 0.0)),
                    als_overhead_s=float(d.get("als_overhead_s", 0.0)),
+                   rand_overhead_s=float(d.get("rand_overhead_s", 0.0)),
                    source=str(d.get("source", "textbook")))
 
     def with_(self, **kw) -> "CostModel":
@@ -176,6 +217,12 @@ def als_flops(i_n: int, r_n: int, j_n: int,
 
 def svd_flops(i_n: int, r_n: int, j_n: int) -> float:
     return DEFAULT_COST_MODEL.svd_flops(i_n, r_n, j_n)
+
+
+def rand_flops(i_n: int, r_n: int, j_n: int,
+               oversample: int = DEFAULT_OVERSAMPLE,
+               power_iters: int = DEFAULT_POWER_ITERS) -> float:
+    return DEFAULT_COST_MODEL.rand_flops(i_n, r_n, j_n, oversample, power_iters)
 
 
 def predicted_best(i_n: int, r_n: int, j_n: int,

@@ -29,8 +29,9 @@ import jax
 
 from . import tensor_ops as T
 from .backend import get_backend
-from .cost_model import als_flops, eig_flops, svd_flops
-from .solvers import ALS, DEFAULT_ALS_ITERS, SOLVERS
+from .cost_model import als_flops, eig_flops, rand_flops, svd_flops
+from .solvers import (ALS, DEFAULT_ALS_ITERS, DEFAULT_OVERSAMPLE,
+                      DEFAULT_POWER_ITERS, RAND, SOLVERS)
 
 VARIANTS = ("sthosvd", "thosvd", "hooi")
 
@@ -55,9 +56,19 @@ class ModeStep:
     ``None`` (the back-compat default) is a sequential singleton.  Group
     members all record the GROUP's modeled peak (the shared input slab plus
     every member's concurrent solver scratch) as their ``peak_bytes``.
+
+    The RANK POLICY fields make a step rank-*adaptive* (error-targeted
+    plans, see :class:`repro.core.api.TuckerConfig` ``error_target``):
+    ``rank_grid`` is the ascending tuple of candidate ranks the executed
+    sketch may settle on (``r_n`` is then the sizing CAP — the largest
+    candidate — so FLOPs/peak stay conservative), and ``tau`` is this
+    mode's squared error budget as a fraction of ``||X||²`` (the HOSVD
+    bound ``||X-X̂||² ≤ Σ_n τ_n²`` equi-partitioned: ``tau = ε²/N``).
+    Fixed-rank steps keep the defaults (``None``/``0.0``) and serialize
+    byte-identically to pre-rank-policy plans.
     """
     mode: int
-    method: str          # "eig" | "als" | "svd"
+    method: str          # "eig" | "als" | "svd" | "rand"
     i_n: int             # mode dimension at solve time
     r_n: int             # truncation rank
     j_n: int             # product of the remaining dims at solve time
@@ -69,18 +80,27 @@ class ModeStep:
     predicted_s: float = 0.0   # predicted wall-clock (0.0 = no calibrated
                                # cost model was available at plan time)
     group: int | None = None   # mode-parallel group id (None = sequential)
+    rank_grid: tuple[int, ...] | None = None  # adaptive candidate ranks
+    tau: float = 0.0     # squared error budget / ||X||² (adaptive steps only)
 
     def to_dict(self) -> dict:
-        return {"mode": self.mode, "method": self.method, "i_n": self.i_n,
-                "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
-                "peak_bytes": self.peak_bytes, "backend": self.backend,
-                "shard_mode": self.shard_mode, "n_shards": self.n_shards,
-                "predicted_s": self.predicted_s, "group": self.group}
+        d = {"mode": self.mode, "method": self.method, "i_n": self.i_n,
+             "r_n": self.r_n, "j_n": self.j_n, "flops": self.flops,
+             "peak_bytes": self.peak_bytes, "backend": self.backend,
+             "shard_mode": self.shard_mode, "n_shards": self.n_shards,
+             "predicted_s": self.predicted_s, "group": self.group}
+        # the rank policy serializes only when present, so fixed-rank plan
+        # JSON stays byte-identical to pre-rank-policy writers
+        if self.rank_grid is not None:
+            d["rank_grid"] = list(self.rank_grid)
+            d["tau"] = self.tau
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModeStep":
         shard_mode = d.get("shard_mode")
         group = d.get("group")
+        rank_grid = d.get("rank_grid")
         return cls(mode=int(d["mode"]), method=str(d["method"]),
                    i_n=int(d["i_n"]), r_n=int(d["r_n"]), j_n=int(d["j_n"]),
                    flops=float(d["flops"]), peak_bytes=int(d["peak_bytes"]),
@@ -88,7 +108,10 @@ class ModeStep:
                    shard_mode=None if shard_mode is None else int(shard_mode),
                    n_shards=int(d.get("n_shards", 1)),
                    predicted_s=float(d.get("predicted_s", 0.0)),
-                   group=None if group is None else int(group))
+                   group=None if group is None else int(group),
+                   rank_grid=None if rank_grid is None
+                   else tuple(int(r) for r in rank_grid),
+                   tau=float(d.get("tau", 0.0)))
 
 
 class TimedSelector:
@@ -165,6 +188,8 @@ def _step_cost(method: str, i_n: int, r_n: int, j_n: int,
         return eig_flops(i_n, r_n, j_n)
     if method == "als":
         return als_flops(i_n, r_n, j_n, als_iters)
+    if method == "rand":
+        return rand_flops(i_n, r_n, j_n)
     return svd_flops(i_n, r_n, j_n)
 
 
@@ -184,6 +209,16 @@ def _solver_scratch_bytes(method: str, i_n: int, r_n: int, j_n: int,
             + 2 * r_n * j_n * accum // n_shards   # R-tensor stays sharded
         if accum != itemsize:
             scratch += i_n * j_n * accum // n_shards  # yc: fp32 input cast
+        return scratch
+    if method == "rand":
+        # Gaussian test tensor Ω (ℓ·J) + range sample / Q (I·ℓ) + the ℓ-wide
+        # projected tensor b (ℓ·J) + the ℓ×ℓ sketched Gram; plus the fp32
+        # input cast for sub-fp32 dtypes (like ALS).  Replicated by design
+        # (the sketch runs before any reshard; see _make_step).
+        ell = min(i_n, r_n + DEFAULT_OVERSAMPLE)
+        scratch = (2 * ell * j_n + i_n * ell + ell * ell) * accum
+        if accum != itemsize:
+            scratch += i_n * j_n * accum
         return scratch
     # svd materializes the unfolding and U, replicated by design
     return (i_n * j_n + i_n * min(i_n, j_n)) * accum
@@ -249,8 +284,16 @@ def _make_step(mode: int, method, selector, i_n: int, r_n: int, j_n: int,
     m = selector(i_n=i_n, r_n=r_n, j_n=j_n) if method is None else method
     if m not in SOLVERS:
         raise ValueError(f"unknown solver {m!r}")
-    if m == "svd":
-        shard_mode = None   # SVD matricizes; sharded schedules run it replicated
+    if not get_backend(backend).supports_solver(m):
+        raise ValueError(
+            f"backend {backend!r} does not support solver {m!r} "
+            f"(capability metadata lists {get_backend(backend).solvers}); "
+            "pin a supported method or pick another impl")
+    if m in ("svd", "rand"):
+        # SVD matricizes; RAND's sketch/QR pipeline has no collective form
+        # yet (distributed.solve_step_sharded handles eig/als only) — both
+        # run replicated in sharded schedules
+        shard_mode = None
     eff_shards = n_shards if shard_mode is not None else 1
     scale = get_backend(backend).cost_scale
     # a calibrated cost model (repro.tune.calibrate) predicts wall-clock per
@@ -291,11 +334,11 @@ def _make_group_steps(g, gid: int, cur, ranks, methods_g, selector,
         i_n, r_n = cur[m], ranks[m]
         j_n = j_base // i_n
         meth = selector(i_n=i_n, r_n=r_n, j_n=j_n) if meth is None else meth
-        if meth == "svd":
+        if meth in ("svd", "rand"):
             raise ValueError(
-                f"mode {m} resolved to 'svd', which matricizes and cannot "
-                "join a mode-parallel group; pin eig/als for grouped modes "
-                "(mode_parallel='auto' never groups svd)")
+                f"mode {m} resolved to {meth!r}, which runs replicated and "
+                "cannot join a mode-parallel group; pin eig/als for grouped "
+                f"modes (mode_parallel='auto' never groups {meth})")
         resolved.append((meth, i_n, r_n, j_n))
     out_elems = j_base
     for m in g:
@@ -539,20 +582,29 @@ def resolve_schedule(
 # ---------------------------------------------------------------------------
 
 def solve_step(y: jax.Array, step: ModeStep, *, als_iters: int = DEFAULT_ALS_ITERS,
+               oversample: int = DEFAULT_OVERSAMPLE,
+               power_iters: int = DEFAULT_POWER_ITERS,
                impl: str | None = None):
     """THE solver dispatch point: every variant's mode solve funnels here.
 
     ``impl`` overrides the step's recorded ops backend; by default each step
     runs on the backend frozen into it at schedule-resolution time.
+    ``oversample``/``power_iters`` only affect ``"rand"`` steps (sketch
+    width ℓ = R_n + oversample and subspace-iteration count).
     """
     impl = step.backend if impl is None else impl
     if step.method == ALS:
         return SOLVERS[ALS](y, step.mode, step.r_n, num_iters=als_iters, impl=impl)
+    if step.method == RAND:
+        return SOLVERS[RAND](y, step.mode, step.r_n, oversample=oversample,
+                             power_iters=power_iters, impl=impl)
     return SOLVERS[step.method](y, step.mode, step.r_n, impl=impl)
 
 
 def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
                  sequential: bool, als_iters: int = DEFAULT_ALS_ITERS,
+                 oversample: int = DEFAULT_OVERSAMPLE,
+                 power_iters: int = DEFAULT_POWER_ITERS,
                  impl: str | None = None, block_until_ready: bool = False):
     """Eager runner: per-mode jitted solves with wall-clock per step.
 
@@ -570,7 +622,8 @@ def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
     for step in steps:
         t0 = time.perf_counter()
         res = solve_step(y if sequential else x, step,
-                         als_iters=als_iters, impl=impl)
+                         als_iters=als_iters, oversample=oversample,
+                         power_iters=power_iters, impl=impl)
         if block_until_ready:
             jax.block_until_ready(res.y_new)
         seconds.append(time.perf_counter() - t0)
@@ -585,19 +638,25 @@ def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
 # ---------------------------------------------------------------------------
 
 def sweep_sthosvd(x, steps: Sequence[ModeStep], *, als_iters: int,
+                  oversample: int = DEFAULT_OVERSAMPLE,
+                  power_iters: int = DEFAULT_POWER_ITERS,
                   impl: str | None = None):
     y = x
     factors: dict[int, jax.Array] = {}
     for step in steps:
-        res = solve_step(y, step, als_iters=als_iters, impl=impl)
+        res = solve_step(y, step, als_iters=als_iters, oversample=oversample,
+                         power_iters=power_iters, impl=impl)
         factors[step.mode] = res.u
         y = res.y_new
     return y, [factors[m] for m in range(x.ndim)]
 
 
 def sweep_thosvd(x, steps: Sequence[ModeStep], *, als_iters: int,
+                 oversample: int = DEFAULT_OVERSAMPLE,
+                 power_iters: int = DEFAULT_POWER_ITERS,
                  impl: str | None = None):
-    factors = [solve_step(x, step, als_iters=als_iters, impl=impl).u
+    factors = [solve_step(x, step, als_iters=als_iters, oversample=oversample,
+                          power_iters=power_iters, impl=impl).u
                for step in steps]
     core = x
     for mode, u in enumerate(factors):
@@ -606,17 +665,23 @@ def sweep_thosvd(x, steps: Sequence[ModeStep], *, als_iters: int,
 
 
 def sweep_hooi(x, steps: Sequence[ModeStep], *, als_iters: int, n_init: int,
+               oversample: int = DEFAULT_OVERSAMPLE,
+               power_iters: int = DEFAULT_POWER_ITERS,
                impl: str | None = None):
     """HOOI with its st-HOSVD init inlined: ``steps[:n_init]`` is the init
     sweep (sequential shrink), the rest are refinement solves on x projected
     over every factor but the step's mode."""
-    _, factors = sweep_sthosvd(x, steps[:n_init], als_iters=als_iters, impl=impl)
+    _, factors = sweep_sthosvd(x, steps[:n_init], als_iters=als_iters,
+                               oversample=oversample, power_iters=power_iters,
+                               impl=impl)
     for step in steps[n_init:]:
         y = x
         for m, u in enumerate(factors):
             if m != step.mode:
                 y = T.ttm(y, u.T, m)
         factors[step.mode] = solve_step(y, step, als_iters=als_iters,
+                                        oversample=oversample,
+                                        power_iters=power_iters,
                                         impl=impl).u
     core = x
     for mode, u in enumerate(factors):

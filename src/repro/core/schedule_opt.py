@@ -4,19 +4,33 @@ memory cap (ROADMAP "Plan-aware memory"; the paper's GPU OOM regime).
 st-HOSVD cost is dominated by the order modes are processed in — shrinking a
 high-compression mode first collapses J_n for every later step — and the key
 structural fact is that the (I_n, R_n, J_n) triple a mode sees depends only
-on the *set* of modes already processed, not on their sequence.  That makes
-the search space a lattice of 2^N subsets instead of N! sequences, so an
-exact Held–Karp-style DP is cheap for any realistic tensor order:
+on the *set* of modes already processed (and the ranks they shrank to), not
+on their sequence.  That makes the search space a lattice of 2^N subsets
+instead of N! sequences, so an exact Held–Karp-style DP is cheap for any
+realistic tensor order:
 
-  state    = subset S of already-shrunk modes
-  value(S) = min total predicted cost of reaching S
-  edge     = processing mode m ∉ S with solver q, priced by the (possibly
-             calibrated) :class:`~repro.core.cost_model.CostModel` —
-             predicted seconds when calibrated, Eq. 4/5 FLOPs otherwise —
+  state    = subset S of already-shrunk modes, encoded as the bit-mask
+             ``mask`` (bit m set ⇔ mode m already shrunk); transitions only
+             ever SET bits, so iterating masks in ascending integer order
+             is a valid topological order of the lattice
+  value(S) = min total predicted cost of reaching S, held in
+             ``best[mask] = (cost, flops, prev_mask, group, assign, rks,
+             cur)`` — cost is the latency objective, flops the
+             lexicographic tie-break, ``prev_mask`` the back-pointer the
+             winning schedule is reconstructed from, ``group``/``assign``/
+             ``rks`` the modes/solvers/ranks of the transition that reached
+             this state, and ``cur`` the current (partially shrunk) dims
+  edge     = processing mode m ∉ S with solver q at rank r, priced by the
+             (possibly calibrated) :class:`~repro.core.cost_model.CostModel`
+             — predicted seconds when calibrated, Eq. 4/5 FLOPs otherwise —
              and gated by ``memory_cap_bytes`` against the same per-device
-             ``_step_peak_bytes`` model the plan layer stamps on every step.
+             ``_step_peak_bytes`` model the plan layer stamps on every step
+             (a transition whose modeled peak exceeds the cap is simply
+             never relaxed, so infeasible schedules are pruned *during*
+             the sweep rather than checked after)
 
-The DP jointly picks the mode ORDER and the per-step SOLVER: a cap below
+The DP jointly picks the mode ORDER, the per-step SOLVER, and — when a
+``rank_grid`` supplies per-mode candidates — the per-step RANK: a cap below
 EIG's I_n² Gram scratch can force the slower-but-smaller ALS iterate (or
 vice versa — ALS's fp32 input cast can be the binding buffer for sub-fp32
 inputs), exactly the trade the paper's OOM regime demands.  For sharded
@@ -24,6 +38,20 @@ plans the per-state shard participation follows
 :func:`~repro.core.distributed.pick_shard_mode` on the state's shrunken
 shape, so different orders genuinely see different per-device peaks — the
 DP searches over shard participation implicitly through the order.
+
+The RANK axis (error-targeted planning, ROADMAP "randomized sketching"):
+``rank_grid[m]`` lists ascending candidate ranks for mode m, and each
+sequential transition tries every (solver, rank) pair, the chosen rank
+propagating into every later step's J_n through ``cur``.  With the shipped
+cost models — monotone in rank for every solver — the per-mode argmin is
+always the smallest candidate admissible under the cap, so the axis's value
+is exact J_n propagation and cap gating at the *chosen* ranks (a tight cap
+can rule out a larger rank the executor might want; the DP detects that at
+plan time instead of shipping cap-priced steps that cannot run).  The
+chosen ranks come back in :attr:`ScheduleSearch.ranks`.  Rank-adaptive
+plans (``TuckerConfig(error_target=...)``) use this to order their sketch
+pass; the rank the *executor* finally settles on is read off the sketch's
+singular-value tail at run time (:func:`repro.core.solvers.rand_sketch`).
 
 With ``max_group > 1`` the DP also searches MODE-PARALLEL GROUPS: a
 transition may shrink a whole set of modes at once, modeling the sharded
@@ -65,7 +93,10 @@ from .solvers import DEFAULT_ALS_ITERS
 
 #: solvers the optimizer may choose between when methods are not pinned.
 #: SVD is deliberately excluded — it is never the predicted-best solver and
-#: always matricizes (plan it explicitly if you want the baseline).
+#: always matricizes (plan it explicitly if you want the baseline).  RAND is
+#: excluded from the *default* set too (its accuracy depends on the spectrum,
+#: which the DP cannot see); pass ``search_methods=("eig", "als", "rand")``
+#: to let sketch FLOPs compete, or pin it per mode via ``methods``.
 SEARCH_METHODS = ("eig", "als")
 
 
@@ -82,45 +113,57 @@ class ScheduleSearch:
     were expanded (diagnostics / tune harvesting).  ``groups`` partitions
     ``order`` into consecutive mode-parallel groups (all singletons for a
     purely sequential schedule; empty for legacy callers that never asked
-    the DP to consider grouping)."""
+    the DP to consider grouping).  ``ranks`` is the rank chosen for each
+    position of ``order`` — equal to the caller's fixed ranks unless a
+    ``rank_grid`` opened the rank axis, in which case it is the DP's
+    per-mode pick from the grid."""
     order: tuple[int, ...]
     methods: tuple[str, ...]        # per position of ``order``
     total_cost: float
     calibrated: bool                # total_cost is seconds, not FLOPs
     n_states: int
     groups: tuple[tuple[int, ...], ...] = ()
+    ranks: tuple[int, ...] = ()     # per position of ``order``
 
     def to_dict(self) -> dict:
         return {"order": list(self.order), "methods": list(self.methods),
                 "total_cost": self.total_cost, "calibrated": self.calibrated,
                 "n_states": self.n_states,
-                "groups": [list(g) for g in self.groups]}
+                "groups": [list(g) for g in self.groups],
+                "ranks": list(self.ranks)}
 
 
-def _candidates(methods, mode: int) -> tuple[str, ...]:
+def _candidates(methods, mode: int,
+                search=SEARCH_METHODS) -> tuple[str, ...]:
     """Solver candidates for ``mode``: the pinned one, or the search set."""
     if methods is None:
-        return SEARCH_METHODS
+        return search
     return (methods[mode],)
 
 
-def _priced_candidates(shape, ranks, methods, itemsize, n_shards, cur, m):
+def _priced_candidates(shape, ranks, methods, itemsize, n_shards, cur, m,
+                       search=SEARCH_METHODS, rank_grid=None):
     """Every (method, peak_bytes, i_n, r_n, j_n) candidate for solving mode
     ``m`` at the DP state whose current (partially shrunk) dims are ``cur``
     — the ONE place the shard-participation and per-device peak rules live,
-    shared by the DP transition loop and the infeasibility message."""
+    shared by the DP transition loop and the infeasibility message.  With a
+    ``rank_grid`` the rank axis opens: one candidate per (solver, grid rank)
+    pair instead of the single fixed ``ranks[m]``."""
     from .plan import _step_peak_bytes   # shared model; plan.py imports us
-    i_n, r_n = shape[m], ranks[m]        # lazily, so no cycle
+    i_n = shape[m]                       # lazily, so no cycle
     j_n = math.prod(cur) // i_n
+    rank_cands = (ranks[m],) if rank_grid is None else tuple(rank_grid[m])
     if n_shards > 1:
         from .distributed import pick_shard_mode
         shard = pick_shard_mode(tuple(cur), m, n_shards)
     else:
         shard = None
-    for meth in _candidates(methods, m):
-        eff = n_shards if (shard is not None and meth != "svd") else 1
-        yield meth, _step_peak_bytes(meth, i_n, r_n, j_n, itemsize, eff), \
-            i_n, r_n, j_n
+    for meth in _candidates(methods, m, search):
+        eff = n_shards if (shard is not None and meth not in ("svd", "rand")) \
+            else 1
+        for r_n in rank_cands:
+            yield meth, _step_peak_bytes(meth, i_n, r_n, j_n, itemsize, eff), \
+                i_n, r_n, j_n
 
 
 def step_cost(cost_model: CostModel, method: str, i_n: int, r_n: int,
@@ -139,6 +182,11 @@ def step_cost(cost_model: CostModel, method: str, i_n: int, r_n: int,
     if method == "als":
         return cost_model.als_scale * \
             cost_model.als_flops(i_n, r_n, j_n, als_iters)
+    if method == "rand":
+        # sketch FLOPs (range sample + power iterations + Rayleigh–Ritz)
+        # with the fitted rand scale — how rank-adaptive sketch passes and
+        # explicit rand pins are priced into the order/solver/rank search
+        return cost_model.rand_scale_eff * cost_model.rand_flops(i_n, r_n, j_n)
     # svd has no fitted scale; eig's per-FLOP seconds are the closest GEMM
     # proxy (same convention as CostModel.predict_seconds) — svd only enters
     # the search when explicitly pinned, so the bias cannot flip a solver
@@ -154,8 +202,11 @@ def _price_group(shape, ranks, methods, als_iters, itemsize, n_shards, cur,
     group-entry shape (J_n keeps the other members un-shrunk), latency is
     the max over members (they run concurrently), flops the sum (the work
     tie-break), and the peak is the group model — shared input slab plus
-    every member's scratch at once.  SVD matricizes and never joins a group;
-    a group containing a pinned-svd mode yields nothing (infeasible)."""
+    every member's scratch at once.  SVD matricizes and RAND runs replicated
+    — neither joins a group; a group containing a mode pinned to either
+    yields nothing (infeasible).  Groups are also rank-FIXED: the rank axis
+    applies to sequential transitions only (a group's fused multi-TTM is
+    sized at plan time and cannot absorb a run-time rank decision)."""
     from .plan import _group_peak_bytes   # shared model; lazy, no cycle
     in_elems = math.prod(cur)
     out_elems = in_elems
@@ -169,7 +220,8 @@ def _price_group(shape, ranks, methods, als_iters, itemsize, n_shards, cur,
     eff = n_shards if shard is not None else 1
     cand_sets = []
     for m in g:
-        cands = tuple(c for c in _candidates(methods, m) if c != "svd")
+        cands = tuple(c for c in _candidates(methods, m)
+                      if c not in ("svd", "rand"))
         if not cands:
             return
         cand_sets.append(cands)
@@ -188,13 +240,17 @@ def _price_group(shape, ranks, methods, als_iters, itemsize, n_shards, cur,
 
 
 def _relax(best, nxt: int, cost: float, flops: float, prev: int,
-           group, assign) -> None:
+           group, assign, rks, cur) -> None:
     """Lexicographic (latency, flops) relaxation: strictly-better latency
     wins; at equal latency the lower-work schedule wins, so a parallel
-    group never displaces a sequential plan it merely ties."""
+    group never displaces a sequential plan it merely ties.  ``rks`` records
+    the rank chosen for each mode of ``group`` (the rank axis) and ``cur``
+    the resulting current dims, which later transitions read their J_n
+    from — the channel through which a rank choice propagates downstream."""
     cand = best.get(nxt)
     if cand is None or (cost, flops) < (cand[0], cand[1]):
-        best[nxt] = (cost, flops, prev, tuple(group), tuple(assign))
+        best[nxt] = (cost, flops, prev, tuple(group), tuple(assign),
+                     tuple(rks), tuple(cur))
 
 
 def optimize_schedule(
@@ -208,17 +264,28 @@ def optimize_schedule(
     cost_model: CostModel | None = None,
     memory_cap_bytes: int | None = None,
     max_group: int = 1,
+    search_methods: Sequence[str] = SEARCH_METHODS,
+    rank_grid: Sequence[Sequence[int]] | None = None,
 ) -> ScheduleSearch:
     """Exact subset DP over st-HOSVD schedules.
 
     ``methods`` pins the solver per MODE (the DP then only searches order);
-    ``None`` lets each step choose from :data:`SEARCH_METHODS`.  With
-    ``n_shards > 1`` every candidate step's peak is the per-device figure
-    for the shard mode :func:`pick_shard_mode` assigns at that state.
-    ``max_group > 1`` additionally searches mode-parallel groupings: a
-    transition may shrink up to ``max_group`` modes at once, priced by the
-    latency/FLOPs rules of :func:`_price_group`; ``max_group=1`` reduces
-    exactly to the sequential DP.
+    ``None`` lets each step choose from ``search_methods`` (default
+    :data:`SEARCH_METHODS`; widen to ``("eig", "als", "rand")`` to let the
+    sketch-FLOPs pricing compete).  With ``n_shards > 1`` every candidate
+    step's peak is the per-device figure for the shard mode
+    :func:`pick_shard_mode` assigns at that state.  ``max_group > 1``
+    additionally searches mode-parallel groupings: a transition may shrink
+    up to ``max_group`` modes at once, priced by the latency/FLOPs rules of
+    :func:`_price_group`; ``max_group=1`` reduces exactly to the sequential
+    DP.
+
+    ``rank_grid`` opens the RANK axis: per-mode ascending candidate ranks
+    (``rank_grid[m]``; ``ranks`` then only seeds the search's sizing
+    fallback) — sequential transitions try every (solver, rank) pair and
+    the chosen rank shrinks ``cur`` for all later steps, so order × solver
+    × rank is searched jointly.  Incompatible with ``max_group > 1``
+    (groups are rank-fixed; see :func:`_price_group`).
 
     Raises :class:`MemoryCapError` when no complete order fits the cap; the
     message names the cheapest-memory step (or group) that still exceeds it
@@ -230,27 +297,41 @@ def optimize_schedule(
     cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
     full = (1 << n) - 1
     max_group = max(1, min(int(max_group), n))
+    search = tuple(search_methods)
+    if rank_grid is not None:
+        rank_grid = tuple(tuple(int(r) for r in g) for g in rank_grid)
+        if len(rank_grid) != n or any(not g for g in rank_grid):
+            raise ValueError(f"rank_grid needs a non-empty candidate tuple "
+                             f"per mode ({n} modes), got {rank_grid}")
+        if max_group > 1:
+            raise ValueError("the rank axis (rank_grid) applies to "
+                             "sequential schedules only; groups are "
+                             "rank-fixed — use max_group=1")
 
-    # best[mask] = (cost, flops, prev_mask, group, assign); transitions only
+    # best[mask] = (cost, flops, prev_mask, group, assign, rks, cur); see
+    # the module docstring for the full state encoding.  Transitions only
     # ever set bits, so ascending-mask iteration is a valid topological
     # order.  cost is the latency objective, flops the lexicographic
-    # tie-break (see _relax).
-    best: dict[int, tuple[float, float, int, tuple, tuple]] = {
-        0: (0.0, 0.0, -1, (), ())}
+    # tie-break (see _relax); cur carries the chosen-rank dims forward.
+    best: dict[int, tuple[float, float, int, tuple, tuple, tuple, tuple]] = {
+        0: (0.0, 0.0, -1, (), (), (), shape)}
     for mask in range(full):
         state = best.get(mask)
         if state is None:
             continue
-        cur = [ranks[i] if mask >> i & 1 else shape[i] for i in range(n)]
+        cur = list(state[6])
         rem = [m for m in range(n) if not mask >> m & 1]
         for m in rem:   # sequential edges, exactly the max_group=1 DP
             for meth, peak, i_n, r_n, j_n in _priced_candidates(
-                    shape, ranks, methods, itemsize, n_shards, cur, m):
+                    shape, ranks, methods, itemsize, n_shards, cur, m,
+                    search, rank_grid):
                 if memory_cap_bytes is not None and peak > memory_cap_bytes:
                     continue
                 c = step_cost(cm, meth, i_n, r_n, j_n, als_iters)
+                nxt_cur = list(cur)
+                nxt_cur[m] = r_n
                 _relax(best, mask | (1 << m), state[0] + c, state[1] + c,
-                       mask, (m,), (meth,))
+                       mask, (m,), (meth,), (r_n,), nxt_cur)
         for size in range(2, min(max_group, len(rem)) + 1):
             for g in combinations(rem, size):
                 nxt = mask
@@ -262,29 +343,38 @@ def optimize_schedule(
                     if memory_cap_bytes is not None \
                             and peak > memory_cap_bytes:
                         continue
+                    nxt_cur = list(cur)
+                    for m in g:
+                        nxt_cur[m] = ranks[m]
                     _relax(best, nxt, state[0] + lat, state[1] + fl,
-                           mask, g, assign)
+                           mask, g, assign, tuple(ranks[m] for m in g),
+                           nxt_cur)
 
     if full not in best:
         raise MemoryCapError(_infeasible_message(
             shape, ranks, methods, als_iters, itemsize, n_shards,
-            memory_cap_bytes, best, max_group=max_group, cost_model=cm))
+            memory_cap_bytes, best, max_group=max_group, cost_model=cm,
+            search=search, rank_grid=rank_grid))
 
     groups: list[tuple[int, ...]] = []
     meths: list[tuple[str, ...]] = []
+    rkss: list[tuple[int, ...]] = []
     mask = full
     while mask:
-        _, _, prev, g, assign = best[mask]
+        _, _, prev, g, assign, rks, _cur = best[mask]
         groups.append(g)
         meths.append(assign)
+        rkss.append(rks)
         mask = prev
     groups.reverse()
     meths.reverse()
+    rkss.reverse()
     return ScheduleSearch(
         order=tuple(m for g in groups for m in g),
         methods=tuple(q for a in meths for q in a),
         total_cost=best[full][0], calibrated=cm.calibrated,
-        n_states=len(best), groups=tuple(groups))
+        n_states=len(best), groups=tuple(groups),
+        ranks=tuple(r for rks in rkss for r in rks))
 
 
 def optimize_grouping(
@@ -315,8 +405,8 @@ def optimize_grouping(
     cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
     max_group = n if max_group is None else max(1, min(int(max_group), n))
 
-    dp: dict[int, tuple[float, float, int, tuple, tuple]] = {
-        0: (0.0, 0.0, -1, (), ())}
+    dp: dict[int, tuple[float, float, int, tuple, tuple, tuple, tuple]] = {
+        0: (0.0, 0.0, -1, (), (), (), shape)}
     for k in range(n):
         state = dp.get(k)
         if state is None:
@@ -330,7 +420,10 @@ def optimize_grouping(
             if memory_cap_bytes is not None and peak > memory_cap_bytes:
                 continue
             c = step_cost(cm, meth, i_n, r_n, j_n, als_iters)
-            _relax(dp, k + 1, state[0] + c, state[1] + c, k, (m,), (meth,))
+            nxt_cur = list(cur)
+            nxt_cur[m] = r_n
+            _relax(dp, k + 1, state[0] + c, state[1] + c, k, (m,), (meth,),
+                   (r_n,), nxt_cur)
         for size in range(2, min(max_group, n - k) + 1):
             g = order[k:k + size]
             for assign, lat, fl, peak in _price_group(
@@ -338,8 +431,11 @@ def optimize_grouping(
                     cur, g, cm):
                 if memory_cap_bytes is not None and peak > memory_cap_bytes:
                     continue
+                nxt_cur = list(cur)
+                for gm in g:
+                    nxt_cur[gm] = ranks[gm]
                 _relax(dp, k + size, state[0] + lat, state[1] + fl,
-                       k, g, assign)
+                       k, g, assign, tuple(ranks[gm] for gm in g), nxt_cur)
 
     if n not in dp:
         deepest = max(dp)
@@ -356,22 +452,27 @@ def optimize_grouping(
 
     groups: list[tuple[int, ...]] = []
     meths: list[tuple[str, ...]] = []
+    rkss: list[tuple[int, ...]] = []
     k = n
     while k:
-        _, _, prev, g, assign = dp[k]
+        _, _, prev, g, assign, rks, _cur = dp[k]
         groups.append(g)
         meths.append(assign)
+        rkss.append(rks)
         k = prev
     groups.reverse()
     meths.reverse()
+    rkss.reverse()
     return ScheduleSearch(
         order=order, methods=tuple(q for a in meths for q in a),
         total_cost=dp[n][0], calibrated=cm.calibrated,
-        n_states=len(dp), groups=tuple(groups))
+        n_states=len(dp), groups=tuple(groups),
+        ranks=tuple(r for rks in rkss for r in rks))
 
 
 def _min_peak_binding(shape, ranks, methods, als_iters, itemsize, n_shards,
-                      cur, candidate_groups, cost_model):
+                      cur, candidate_groups, cost_model,
+                      search=SEARCH_METHODS, rank_grid=None):
     """The cheapest-memory candidate over ``candidate_groups`` (each a tuple
     of modes; singletons are plain sequential steps) at the state whose
     current dims are ``cur`` — the step/group any schedule must eventually
@@ -381,7 +482,8 @@ def _min_peak_binding(shape, ranks, methods, als_iters, itemsize, n_shards,
     for g in candidate_groups:
         if len(g) == 1:
             for meth, peak, i_n, r_n, j_n in _priced_candidates(
-                    shape, ranks, methods, itemsize, n_shards, cur, g[0]):
+                    shape, ranks, methods, itemsize, n_shards, cur, g[0],
+                    search, rank_grid):
                 if binding is None or peak < binding[0]:
                     binding = (peak, g, (meth,), (i_n, r_n, j_n))
         else:
@@ -416,21 +518,22 @@ def _format_binding(shape, ranks, cap, done, binding, n_shards) -> str:
 
 
 def _infeasible_message(shape, ranks, methods, als_iters, itemsize, n_shards,
-                        cap, best, max_group=1, cost_model=None) -> str:
+                        cap, best, max_group=1, cost_model=None,
+                        search=SEARCH_METHODS, rank_grid=None) -> str:
     """Name the binding step (or group): at the deepest reachable state, the
     remaining candidate whose cheapest-memory pricing still exceeds the cap
     by the least — the transition any schedule must eventually pay."""
     n = len(shape)
     cm = cost_model if cost_model is not None else DEFAULT_COST_MODEL
     deepest = max(best, key=lambda mask: bin(mask).count("1"))
-    cur = [ranks[i] if deepest >> i & 1 else shape[i] for i in range(n)]
+    cur = list(best[deepest][6])   # state dims, rank-axis aware
     done = [i for i in range(n) if deepest >> i & 1]
     rem = [m for m in range(n) if not deepest >> m & 1]
     cands = [(m,) for m in rem]
     for size in range(2, min(max_group, len(rem)) + 1):
         cands.extend(combinations(rem, size))
     binding = _min_peak_binding(shape, ranks, methods, als_iters, itemsize,
-                                n_shards, cur, cands, cm)
+                                n_shards, cur, cands, cm, search, rank_grid)
     return _format_binding(shape, ranks, cap, done, binding, n_shards)
 
 

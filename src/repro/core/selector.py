@@ -76,10 +76,26 @@ class Selector:
     cost_model: CostModel = field(default_factory=lambda: DEFAULT_COST_MODEL)
     meta: dict = field(default_factory=dict)
 
-    def __call__(self, *, i_n: int, r_n: int, j_n: int) -> str:
+    def __call__(self, *, i_n: int, r_n: int, j_n: int,
+                 candidates: tuple[str, ...] | None = None) -> str:
+        """Solver for one mode solve.  ``candidates=None`` is the legacy
+        EIG-vs-ALS decision (what the trained tree answers directly).  A
+        wider tuple — e.g. ``("eig", "als", "rand")`` — keeps the tree's
+        eig/als call but lets the calibrated cost model overrule it with
+        any extra candidate it prices cheaper (backend capability gating
+        is the planner's job; candidates passed here are assumed runnable).
+        """
         if self.tree is None or self._out_of_range(i_n, r_n, j_n):
-            return self.cost_model.predicted_best(i_n, r_n, j_n)
-        return LABELS[self.tree.predict_one(extract_features(i_n, r_n, j_n))]
+            return self.cost_model.predicted_best(
+                i_n, r_n, j_n, methods=candidates or ("eig", "als"))
+        pick = LABELS[self.tree.predict_one(
+            extract_features(i_n, r_n, j_n))]
+        extras = tuple(c for c in candidates or () if c not in LABELS)
+        if not extras:
+            return pick
+        # tree's winner first: ties and un-priceable cases keep the tree
+        return self.cost_model.predicted_best(
+            i_n, r_n, j_n, methods=(pick,) + extras)
 
     def _out_of_range(self, i_n, r_n, j_n) -> bool:
         if self.trained_range is None:

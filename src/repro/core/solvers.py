@@ -8,6 +8,16 @@ and ``y_new`` is the tensor with mode ``n`` shrunk to R_n:
   ALS  (paper Alg. 2 lines 10–13 + Alg. 3): rank-R_n alternating LS on
        Y_(n) ≈ L R^T, then QR(L) for orthonormality, core = TTM(R-tensor, R̂).
   SVD  (paper Alg. 1; baseline only — always slowest, kept for Fig. 2).
+  RAND (randomized range finder / sketched Gram, Minster–Saibaba–Kilmer
+       [1905.07311]): Y_(n) Ω for a Gaussian test tensor Ω with
+       ℓ = R_n + oversample columns → QR → optional power iterations →
+       Rayleigh–Ritz rotation of the ℓ-dim sketch basis (an eig step on the
+       ℓ×ℓ sketched Gram) truncated to R_n.  Cheap when R_n ≪ I_n: the
+       I_n²·J_n Gram is replaced by O(I_n·ℓ·J_n) sketch contractions, all
+       expressed through the same TTM/TTT/Gram backend primitives (no
+       matricization).  Its singular-value tail is what rank-adaptive
+       (``error_target``) plans read the per-mode rank off — see
+       :func:`rand_sketch` and :meth:`repro.core.api.TuckerPlan.resolve_ranks`.
 
 Everything is matricization-free (built on whichever registered
 :mod:`repro.core.backend` supplies TTM/TTT/Gram); ``impl`` names an ops
@@ -134,5 +144,79 @@ def svd_solve(y: jax.Array, mode: int, rank: int, *, impl: str = "matfree") -> S
     return SolveResult(u.astype(y.dtype), T.fold(core2, mode, out_shape).astype(y.dtype))
 
 
-SOLVERS = {"eig": eig_solve, "als": als_solve, "svd": svd_solve}
-EIG, ALS, SVD = "eig", "als", "svd"
+# ---------------------------------------------------------------------------
+# RAND solver (randomized range finder, Minster–Saibaba–Kilmer 1905.07311)
+# ---------------------------------------------------------------------------
+
+DEFAULT_OVERSAMPLE = 8   # ℓ = R_n + oversample sketch columns
+DEFAULT_POWER_ITERS = 1  # subspace iterations sharpening the sketch basis
+
+
+@partial(jax.jit, static_argnames=("mode", "width", "power_iters", "seed", "impl"))
+def rand_sketch(y: jax.Array, mode: int, width: int, *,
+                power_iters: int = DEFAULT_POWER_ITERS,
+                seed: int = 0,
+                impl: str = "matfree"):
+    """One-shot mode sketch: everything a rank decision needs, in one pass.
+
+    Draws a Gaussian test tensor Ω (mode ``mode`` sized ``width`` = ℓ),
+    forms the range sample ``Y_(n) Ω_(n)^T`` via the backend TTT kernel
+    (never materializing an unfolding), orthonormalizes it, optionally
+    runs ``power_iters`` subspace iterations (TTM project → TTT expand →
+    QR), and Rayleigh–Ritz diagonalizes the ℓ×ℓ sketched Gram.
+
+    Returns ``(q, b, evals, vecs, energy)``:
+
+    - ``q``      (I_n, ℓ)  orthonormal sketch basis,
+    - ``b``      tensor with mode shrunk to ℓ: ``TTM(y, qᵀ, mode)``,
+    - ``evals``  (ℓ,) ascending eigenvalues of ``Gram(b, mode)`` — the
+      squared sketched singular values of the unfolding,
+    - ``vecs``   (ℓ, ℓ) matching eigenvectors,
+    - ``energy`` scalar ``||y||_F²``.
+
+    The captured energy of a rank-r truncation of this basis is exactly
+    ``sum(evals[-r:])``, so the *actual* discarded energy at rank r is
+    ``energy - sum(evals[-r:])`` — an exact tail for the factor that will
+    really be used, which is what makes the per-mode HOSVD error budget
+    check in rank-adaptive execution a guarantee rather than an estimate.
+    """
+    ttm, gram, ttt = backend_ops(impl)
+    cdtype = jnp.promote_types(y.dtype, jnp.float32)
+    yc = y.astype(cdtype)
+    energy = jnp.sum(jnp.square(yc))
+    w_shape = y.shape[:mode] + (width,) + y.shape[mode + 1:]
+    w = jax.random.normal(jax.random.PRNGKey(seed), w_shape, dtype=cdtype)
+    ym = ttt(yc, w, mode)                                # (I_n, ℓ) range sample
+    q, _ = jnp.linalg.qr(ym)
+    for _ in range(power_iters):
+        b = ttm(yc, q.T, mode)                           # project: mode → ℓ
+        ym = ttt(yc, b, mode)                            # expand: Y_(n)Y_(n)ᵀ Q
+        q, _ = jnp.linalg.qr(ym)
+    b = ttm(yc, q.T, mode)
+    gb = gram(b, mode)                                   # (ℓ, ℓ) sketched Gram
+    evals, vecs = jnp.linalg.eigh(gb.astype(jnp.promote_types(gb.dtype, jnp.float32)))
+    return q, b, evals, vecs, energy
+
+
+@partial(jax.jit, static_argnames=("mode", "rank", "oversample", "power_iters",
+                                   "seed", "impl"))
+def rand_solve(y: jax.Array, mode: int, rank: int, *,
+               oversample: int = DEFAULT_OVERSAMPLE,
+               power_iters: int = DEFAULT_POWER_ITERS,
+               seed: int = 0,
+               impl: str = "matfree") -> SolveResult:
+    """Randomized mode solve: sketch at width ℓ = rank + oversample, then the
+    existing eig machinery refines within the sketch — the Rayleigh–Ritz
+    rotation *is* an eig step on the ℓ×ℓ sketched Gram, truncated to R_n."""
+    width = min(y.shape[mode], rank + oversample)
+    q, b, _, vecs, _ = rand_sketch(
+        y, mode, width, power_iters=power_iters, seed=seed, impl=impl)
+    v = vecs[:, -rank:][:, ::-1].astype(q.dtype)         # leading R_n Ritz vecs
+    ttm, _, _ = backend_ops(impl)
+    u = jnp.dot(q, v, precision=jax.lax.Precision.HIGHEST)
+    y_new = ttm(b, v.T, mode)                            # rotate core: ℓ → R_n
+    return SolveResult(u.astype(y.dtype), y_new.astype(y.dtype))
+
+
+SOLVERS = {"eig": eig_solve, "als": als_solve, "svd": svd_solve, "rand": rand_solve}
+EIG, ALS, SVD, RAND = "eig", "als", "svd", "rand"

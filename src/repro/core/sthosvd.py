@@ -65,6 +65,10 @@ class ModeTrace:
     predicted_s: float = 0.0   # plan-time prediction from a calibrated cost
                                # model (0.0 = uncalibrated) — compare with
                                # ``seconds`` for predicted-vs-actual drift
+    tail_err: float = 0.0      # discarded energy at this step as a fraction
+                               # of ||X||² (rank-adaptive executions only;
+                               # 0.0 = not measured).  Flows into the tune
+                               # store as the achieved-error label.
 
     @property
     def delta_s(self) -> float:
@@ -80,6 +84,10 @@ class SthosvdResult:
     tucker: TuckerTensor
     trace: list[ModeTrace] = field(default_factory=list)
     select_overhead_s: float = 0.0
+    error_bound: float | None = None  # rank-adaptive executions: guaranteed
+                                      # relative-error upper bound
+                                      # sqrt(Σ_n tail_err_n) from the HOSVD
+                                      # inequality; None for fixed-rank runs
 
     @property
     def methods(self) -> tuple[str, ...]:

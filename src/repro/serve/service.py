@@ -251,7 +251,11 @@ class TuckerService:
         if not hasattr(x, "shape"):
             x = jnp.asarray(x)
         shape = tuple(int(s) for s in x.shape)
-        validate_ranks(shape, config.ranks)
+        if config.ranks is not None:
+            validate_ranks(shape, config.ranks)
+        # rank-adaptive configs (error_target, ranks=None) have no ranks to
+        # validate here: per-mode ranks resolve per input at execute time,
+        # and the config's own __post_init__ already validated the target
         pinned = self._pinned(config)
         dtype = str(jnp.dtype(x.dtype))
         bshape = self._policy.bucket_shape(shape)
@@ -612,8 +616,9 @@ class TuckerService:
     # -- observability -------------------------------------------------------
     def _bucket_label(self, key, taken: set) -> str:
         bshape, dtype, cfg = key
-        label = "x".join(str(s) for s in bshape) + f"/{dtype}" \
-            + f"/r{'x'.join(str(r) for r in cfg.ranks)}"
+        policy = (f"e{cfg.error_target:g}" if cfg.ranks is None
+                  else "x".join(str(r) for r in cfg.ranks))
+        label = "x".join(str(s) for s in bshape) + f"/{dtype}/r{policy}"
         if cfg.variant != "sthosvd":
             label += f"/{cfg.variant}"
         base, k = label, 2

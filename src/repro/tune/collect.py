@@ -220,27 +220,31 @@ def measurements_from_traces(traces, *, platform: str, dtype: str,
     """Convert timed ``ModeTrace`` records into harvest Measurements.
 
     Traces with no real timing (``seconds <= 0`` — e.g. from the fused
-    jitted sweep, where per-step time is unobservable) and non-EIG/ALS
-    solves are skipped: only rows a trainer can label against belong in
-    the store.
+    jitted sweep, where per-step time is unobservable) and solver families
+    outside EIG/ALS/RAND are skipped: only rows a trainer can label
+    against belong in the store.
 
     Each row carries the trace's plan-time ``predicted_s`` (when a
     calibrated cost model priced the schedule), so decisions made by the
     schedule optimizer — which solver the DP picked and what it believed
     the step would cost — become auditable records the flywheel can check
-    for drift (``python -m repro.tune report``).
+    for drift (``python -m repro.tune report``).  Rank-adaptive ``rand``
+    traces additionally carry their measured fractional tail energy, which
+    lands as the row's ``rel_err`` achieved-error label — so future
+    selectors can learn speed AND accuracy.
     """
     device = device_fingerprint()
     out = []
     for t in traces:
-        if t.seconds <= 0.0 or t.method not in ("eig", "als"):
+        if t.seconds <= 0.0 or t.method not in ("eig", "als", "rand"):
             continue
         out.append(Measurement(
             platform=platform, backend=t.backend, device=device,
             i_n=t.i_n, r_n=t.r_n, j_n=t.j_n, method=t.method,
             seconds=float(t.seconds), dtype=dtype, order=order,
             als_iters=als_iters, source=HARVEST,
-            predicted_s=float(getattr(t, "predicted_s", 0.0))))
+            predicted_s=float(getattr(t, "predicted_s", 0.0)),
+            rel_err=float(getattr(t, "tail_err", 0.0))))
     return out
 
 

@@ -60,6 +60,13 @@ class Measurement:
                               # optimizer priced this step at (0.0 = none) —
                               # harvested records make DP decisions auditable
                               # and expose calibration drift (see `report`)
+    rel_err: float = 0.0     # achieved-error label: discarded energy of this
+                             # step as a fraction of ||X||² (rank-adaptive
+                             # rand executions; 0.0 = exact-at-rank / not
+                             # measured).  Lets future selectors learn speed
+                             # AND accuracy.  A measurement VALUE, not part
+                             # of key(): re-observations of the same problem
+                             # merge as usual.
 
     def key(self) -> tuple:
         """Dedup/merge identity: everything but (seconds, source)."""
@@ -87,7 +94,8 @@ class Measurement:
                    order=int(d.get("order", 3)),
                    als_iters=int(d.get("als_iters", 5)),
                    source=str(d.get("source", COLLECT)),
-                   predicted_s=float(d.get("predicted_s", 0.0)))
+                   predicted_s=float(d.get("predicted_s", 0.0)),
+                   rel_err=float(d.get("rel_err", 0.0)))
 
 
 class RecordStore:

@@ -38,15 +38,26 @@ from .records import Measurement, RecordStore
 MIN_EXAMPLES = 12
 
 
-def labeled_examples(measurements: Iterable[Measurement]):
+def labeled_examples(measurements: Iterable[Measurement], *,
+                     rel_err_tolerance: float | None = None):
     """Pair eig/als records per problem → (features, labels, times) arrays.
 
     ``times[k] = (eig_seconds, als_seconds)`` for example k; unpaired
     records are simply not emitted (count them via
     ``len(records) - 2*len(labels)`` if needed).
+
+    ``rel_err_tolerance`` makes labeling accuracy-aware: records whose
+    achieved-error label (``Measurement.rel_err`` — the fractional tail
+    energy rank-adaptive rand executions report) exceeds the tolerance are
+    dropped before pairing, so a fast-but-out-of-budget observation can
+    never win a speed comparison.  eig/als records carry ``rel_err=0.0``
+    (exact at their rank) and always pass; ``None`` (default) disables the
+    filter entirely.
     """
     best: dict[tuple, dict[str, Measurement]] = {}
     for m in measurements:
+        if rel_err_tolerance is not None and m.rel_err > rel_err_tolerance:
+            continue
         slot = best.setdefault(m.problem_key(), {})
         cur = slot.get(m.method)
         if cur is None or m.seconds < cur.seconds:

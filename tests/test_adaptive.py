@@ -1,0 +1,273 @@
+"""Rank-adaptive planning: the `rand` solver family, error-targeted plans
+(`TuckerConfig(error_target=...)`), the rank axis in the schedule DP, the
+selector's widened candidate set, achieved-error labels in the tune store,
+and adaptive configs flowing through serving."""
+
+from dataclasses import replace
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (TuckerConfig, TuckerPlan, plan, rand_sketch,
+                        rand_solve, tensor_ops as T)
+from repro.core.backend import backend_ops
+from repro.core.cost_model import CostModel
+from repro.core.schedule_opt import optimize_schedule
+from repro.core.selector import Selector
+from repro.core.sthosvd import ModeTrace
+from repro.tune.collect import measurements_from_traces
+from repro.tune.records import Measurement
+from repro.tune.train import labeled_examples
+
+
+def lowrank(dims, ranks, seed=0, noise=0.01):
+    rng = np.random.default_rng(seed)
+    core = rng.standard_normal(ranks)
+    us = [np.linalg.qr(rng.standard_normal((d, r)))[0]
+          for d, r in zip(dims, ranks)]
+    x = T.reconstruct(jnp.asarray(core, jnp.float32),
+                      [jnp.asarray(u, jnp.float32) for u in us])
+    if noise:
+        rms = float(jnp.sqrt(jnp.mean(x ** 2)))
+        x = x + noise * rms * jnp.asarray(rng.standard_normal(dims),
+                                          jnp.float32)
+    return x
+
+
+DIMS, TRUE_RANKS, EPS = (60, 40, 24), (6, 5, 4), 0.05
+
+
+class TestRandSolver:
+    def test_rand_solve_recovers_lowrank_subspace(self):
+        x = lowrank(DIMS, TRUE_RANKS, noise=0.0)
+        y, factors = x, {}
+        for mode, r in enumerate(TRUE_RANKS):
+            res = rand_solve(y, mode, r)
+            factors[mode] = res.u
+            y = res.y_new
+        # orthonormal factors, near-exact reconstruction at the true ranks
+        for u in factors.values():
+            eye = np.eye(u.shape[1], dtype=np.float32)
+            np.testing.assert_allclose(np.asarray(u.T @ u), eye, atol=1e-4)
+        xh = T.reconstruct(y, [factors[m] for m in range(len(DIMS))])
+        err = float(jnp.linalg.norm(x - xh) / jnp.linalg.norm(x))
+        assert err < 1e-3
+
+    def test_sketch_tail_is_exact_for_the_used_factor(self):
+        # the rank decision's tail — energy minus the top-r sketched
+        # eigenvalues — must equal the true discarded energy of the factor
+        # u = q·v actually built from the sketch, at ANY width
+        x = lowrank((30, 20, 16), (5, 4, 3), noise=0.05)
+        width = 12
+        q, b, evals, vecs, energy = rand_sketch(x, 0, width)
+        ev = np.asarray(evals, dtype=np.float64)
+        ttm = backend_ops("matfree")[0]
+        for r in (2, 4, 8):
+            v = vecs[:, -r:][:, ::-1].astype(q.dtype)
+            u = jnp.dot(q, v)
+            resid = x - ttm(ttm(x, u.T, 0), u, 0)
+            actual = float(jnp.linalg.norm(resid)) ** 2
+            modeled = float(energy) - float(ev[::-1][:r].sum())
+            assert actual == pytest.approx(modeled, rel=1e-3, abs=1e-2)
+
+    def test_rand_is_exposed_as_a_solver(self):
+        from repro.core import RAND
+        from repro.core.solvers import SOLVERS
+        assert RAND == "rand" and "rand" in SOLVERS
+
+
+class TestAdaptiveConfig:
+    def test_ranks_none_requires_error_target(self):
+        with pytest.raises(ValueError):
+            TuckerConfig()
+
+    @pytest.mark.parametrize("eps", [0.0, 1.0, -0.1, 2.0])
+    def test_error_target_range(self, eps):
+        with pytest.raises(ValueError):
+            TuckerConfig(error_target=eps)
+
+    def test_error_target_rejects_incompatible_modes(self):
+        with pytest.raises(ValueError):
+            TuckerConfig(error_target=0.05, variant="hooi")
+        with pytest.raises(ValueError):
+            TuckerConfig(error_target=0.05, mode_parallel="auto")
+        with pytest.raises(ValueError):
+            TuckerConfig(error_target=0.05, impl="sharded")
+
+    def test_rank_grid_requires_error_target(self):
+        with pytest.raises(ValueError):
+            TuckerConfig(ranks=(4, 4, 4), rank_grid=(2, 4))
+
+    def test_rank_grid_normalization_and_roundtrip(self):
+        c = TuckerConfig(error_target=0.05, rank_grid=[2, 4, 8],
+                         oversample=4, power_iters=2)
+        assert c.rank_grid == (2, 4, 8)
+        assert TuckerConfig.from_dict(c.to_dict()) == c
+        per_mode = TuckerConfig(error_target=0.05,
+                                rank_grid=((2, 4), (3, 6), (2,)))
+        assert TuckerConfig.from_dict(per_mode.to_dict()) == per_mode
+
+
+class TestAdaptiveExecution:
+    def test_error_target_met_by_refined_sweep(self):
+        x = lowrank(DIMS, TRUE_RANKS)
+        p = plan(DIMS, jnp.float32, TuckerConfig(error_target=EPS))
+        assert p.is_adaptive
+        res = p.execute(x)
+        err = float(res.tucker.rel_error(x))
+        assert err <= EPS
+        assert res.error_bound <= EPS
+        assert err <= res.error_bound * 1.05  # bound is honest, not slack
+        # refined sweep ran the classic solvers; sketch cost is selection
+        assert all(t.method in ("eig", "als") for t in res.trace)
+        assert res.select_overhead_s > 0.0
+        assert any(t.tail_err > 0.0 for t in res.trace)
+        # the policy found (at most a few above) the true ranks, not I_n
+        assert all(r <= 2 * t for r, t in zip(res.tucker.ranks, TRUE_RANKS))
+
+    def test_sketch_only_execution(self):
+        x = lowrank(DIMS, TRUE_RANKS)
+        p = plan(DIMS, jnp.float32,
+                 TuckerConfig(error_target=EPS, methods="rand"))
+        res = p.execute(x)
+        assert all(t.method == "rand" for t in res.trace)
+        assert float(res.tucker.rel_error(x)) <= EPS
+        assert res.error_bound <= EPS
+
+    def test_rank_grid_restricts_choices(self):
+        x = lowrank(DIMS, TRUE_RANKS)
+        p = plan(DIMS, jnp.float32,
+                 TuckerConfig(error_target=EPS, rank_grid=(4, 8)))
+        res = p.execute(x)
+        assert all(r in (4, 8) for r in res.tucker.ranks)
+        assert float(res.tucker.rel_error(x)) <= EPS
+
+    def test_ranks_cap_the_default_grid(self):
+        x = lowrank(DIMS, TRUE_RANKS)
+        p = plan(DIMS, jnp.float32,
+                 TuckerConfig(ranks=(5, 4, 3), error_target=EPS))
+        res = p.execute(x)
+        assert all(r <= c for r, c in zip(res.tucker.ranks, (5, 4, 3)))
+
+    def test_resolve_ranks(self):
+        x = lowrank(DIMS, TRUE_RANKS)
+        p = plan(DIMS, jnp.float32, TuckerConfig(error_target=EPS))
+        ranks, bound = p.resolve_ranks(x)
+        assert len(ranks) == 3 and all(1 <= r <= d
+                                       for r, d in zip(ranks, DIMS))
+        assert 0.0 <= bound <= EPS
+        fixed = plan(DIMS, jnp.float32, TuckerConfig(ranks=(4, 4, 4)))
+        with pytest.raises(ValueError):
+            fixed.resolve_ranks(x)
+
+    def test_execute_batch_item_by_item(self):
+        xs = jnp.stack([lowrank(DIMS, TRUE_RANKS, seed=s) for s in range(2)])
+        p = plan(DIMS, jnp.float32, TuckerConfig(error_target=EPS))
+        out = p.execute_batch(xs)
+        assert len(out) == 2
+        for r, xi in zip(out, xs):
+            assert float(r.tucker.rel_error(xi)) <= EPS
+
+
+class TestAdaptivePlanJSON:
+    def test_adaptive_plan_round_trips(self):
+        p = plan(DIMS, jnp.float32,
+                 TuckerConfig(error_target=EPS, rank_grid=(4, 8),
+                              oversample=4, power_iters=2))
+        p2 = TuckerPlan.from_json(p.to_json())
+        assert p2.is_adaptive
+        assert p2.config == p.config
+        assert p2.describe() == p.describe()
+        assert [ (s.mode, s.rank_grid, s.tau) for s in p2.schedule ] == \
+               [ (s.mode, s.rank_grid, s.tau) for s in p.schedule ]
+        x = lowrank(DIMS, TRUE_RANKS)
+        assert float(p2.execute(x).tucker.rel_error(x)) <= EPS
+
+    def test_describe_names_the_policy(self):
+        p = plan(DIMS, jnp.float32, TuckerConfig(error_target=EPS))
+        d = p.describe()
+        assert "error_target=0.05" in d and "rank-adaptive" in d
+        assert "grid=" in d
+
+
+class TestScheduleDPRankAxis:
+    def test_legacy_fixed_ranks_unchanged(self):
+        rs = optimize_schedule((30, 20, 10), (8, 6, 4))
+        fixed = (8, 6, 4)
+        assert rs.ranks == tuple(fixed[m] for m in rs.order)
+
+    def test_grid_opens_the_rank_axis(self):
+        rs = optimize_schedule((30, 20, 10), (8, 6, 4),
+                               methods=["rand"] * 3,
+                               rank_grid=[(2, 8), (2, 6), (2, 4)])
+        grids = {0: (2, 8), 1: (2, 6), 2: (2, 4)}
+        assert all(r in grids[m] for m, r in zip(rs.order, rs.ranks))
+        # with no accuracy term in the DP objective the cheapest (smallest)
+        # grid rank wins every mode
+        assert rs.ranks == (2, 2, 2)
+
+
+class TestSelectorCandidates:
+    def test_candidates_widen_the_cost_fallback(self):
+        cheap = Selector(cost_model=CostModel(rand_scale=1e-12))
+        kw = dict(i_n=500, r_n=8, j_n=400)
+        assert cheap(**kw, candidates=("eig", "als", "rand")) == "rand"
+        assert cheap(**kw) in ("eig", "als")
+        dear = Selector(cost_model=CostModel(rand_scale=1e12))
+        assert dear(**kw, candidates=("eig", "als", "rand")) in ("eig", "als")
+
+    def test_rand_scale_falls_back_to_eig(self):
+        assert CostModel().rand_scale_eff == CostModel().eig_scale
+        assert CostModel(eig_scale=5e-12).rand_scale_eff == 5e-12
+        assert CostModel(rand_scale=3e-12).rand_scale_eff == 3e-12
+        assert CostModel.from_dict({}).rand_scale is None
+
+
+class TestTuneAchievedErrorLabels:
+    MEAS = dict(platform="cpu", backend="matfree", device="box",
+                i_n=32, r_n=4, j_n=64, method="rand", seconds=0.01)
+
+    def test_rel_err_round_trips_and_is_not_identity(self):
+        m = Measurement(**self.MEAS, rel_err=0.02)
+        assert Measurement.from_dict(m.to_dict()) == m
+        assert m.key() == replace(m, rel_err=0.5).key()
+
+    def test_rand_traces_harvest_with_tail_labels(self):
+        traces = [
+            ModeTrace(mode=0, method="rand", i_n=32, r_n=4, j_n=64,
+                      seconds=0.01, tail_err=0.003),
+            ModeTrace(mode=1, method="eig", i_n=16, r_n=4, j_n=128,
+                      seconds=0.02),
+            ModeTrace(mode=2, method="svd", i_n=8, r_n=2, j_n=64,
+                      seconds=0.02),
+        ]
+        ms = measurements_from_traces(traces, platform="cpu",
+                                      dtype="float32", order=3)
+        assert [m.method for m in ms] == ["rand", "eig"]  # svd filtered
+        assert ms[0].rel_err == pytest.approx(0.003)
+        assert ms[1].rel_err == 0.0
+
+    def test_labeled_examples_tolerance_drops_lossy_records(self):
+        eig = Measurement(**{**self.MEAS, "method": "eig",
+                             "seconds": 1.0})
+        als = Measurement(**{**self.MEAS, "method": "als",
+                             "seconds": 0.1}, rel_err=0.5)
+        _, labels, _ = labeled_examples([eig, als])
+        assert len(labels) == 1          # lossy-but-fast als wins unfiltered
+        _, labels, _ = labeled_examples([eig, als], rel_err_tolerance=0.1)
+        assert len(labels) == 0          # filtered: no pair survives
+
+
+class TestServeAdaptive:
+    def test_service_serves_error_targeted_requests(self):
+        from repro.serve import TuckerService
+        x = lowrank(DIMS, TRUE_RANKS)
+        cfg = TuckerConfig(error_target=EPS)
+        with TuckerService() as svc:
+            svc.start()
+            res = svc.wait(svc.submit(x, cfg))
+            stats = svc.stats()
+        assert float(res.tucker.rel_error(x)) <= EPS
+        labels = list(stats["buckets"])
+        assert any(label.endswith(f"/re{EPS:g}") for label in labels), labels

@@ -278,13 +278,13 @@ class TestGroupedDP:
         # lexicographic (latency, flops): a group that merely TIES the
         # sequential latency must not displace it, because groups always
         # carry more total work (sum vs the telescoped sequential FLOPs)
-        best = {}
-        _relax(best, 1, 10.0, 5.0, 0, (0,), ("eig",))
-        _relax(best, 1, 10.0, 7.0, 0, (0, 1), ("eig", "eig"))
+        best, cur = {}, (8, 8)
+        _relax(best, 1, 10.0, 5.0, 0, (0,), ("eig",), (4,), cur)
+        _relax(best, 1, 10.0, 7.0, 0, (0, 1), ("eig", "eig"), (4, 4), cur)
         assert best[1][3] == (0,)            # equal latency, more flops: no
-        _relax(best, 1, 10.0, 4.0, 0, (0, 1), ("eig", "als"))
+        _relax(best, 1, 10.0, 4.0, 0, (0, 1), ("eig", "als"), (4, 4), cur)
         assert best[1][3] == (0, 1)          # equal latency, fewer flops
-        _relax(best, 1, 9.0, 99.0, 0, (1,), ("als",))
+        _relax(best, 1, 9.0, 99.0, 0, (1,), ("als",), (4,), cur)
         assert best[1][:2] == (9.0, 99.0)    # lower latency always wins
 
     def test_cap_forces_group_split(self):

@@ -1,0 +1,67 @@
+"""Plan-JSON compatibility: fixed-rank plans written before the rank-policy
+axis existed (PR 7 fixtures, checked in under ``tests/data/``) must load
+unchanged, describe identically, and fresh fixed-rank plans must serialize
+without any adaptive keys — rank-adaptive fields are strictly additive."""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.core import TuckerConfig, TuckerPlan, plan
+
+DATA = Path(__file__).parent / "data"
+FIXTURE_JSON = DATA / "plan_pr7_fixed_rank.json"
+FIXTURE_DESCRIBE = DATA / "plan_pr7_describe.txt"
+
+# the exact config the fixture was generated from (pre-rank-policy code)
+FIXTURE_CFG = TuckerConfig(ranks=(40, 8, 12), methods=("eig", "als", "eig"),
+                           mode_order="opt", donate_input=False)
+FIXTURE_SHAPE = (48, 224, 128)
+
+
+class TestLegacyPlanLoads:
+    def test_fixture_loads_and_describes_identically(self):
+        p = TuckerPlan.load(FIXTURE_JSON)
+        assert p.shape == FIXTURE_SHAPE
+        assert not p.is_adaptive
+        assert p.config.error_target is None
+        assert p.describe() == FIXTURE_DESCRIBE.read_text().rstrip("\n")
+
+    def test_fixture_round_trips_byte_identically(self):
+        p = TuckerPlan.load(FIXTURE_JSON)
+        assert json.loads(p.to_json()) == json.loads(FIXTURE_JSON.read_text())
+
+    def test_fresh_plan_matches_pre_rank_policy_serialization(self):
+        # a plan built TODAY from the fixture's config serializes to the
+        # same document the pre-PR-8 code wrote
+        p = plan(FIXTURE_SHAPE, jnp.float32, FIXTURE_CFG)
+        fresh, fixture = json.loads(p.to_json()), json.loads(
+            FIXTURE_JSON.read_text())
+        fresh.pop("select_seconds"), fixture.pop("select_seconds")
+        assert fresh == fixture
+        assert p.describe() == FIXTURE_DESCRIBE.read_text().rstrip("\n")
+
+    def test_fixture_plan_still_executes(self):
+        import numpy as np
+        p = TuckerPlan.load(FIXTURE_JSON)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(p.shape),
+                        jnp.float32)
+        res = p.execute(x)
+        assert res.tucker.ranks == (40, 8, 12)
+
+
+class TestNoAdaptiveKeysOnFixedPlans:
+    def test_config_dict_has_no_adaptive_keys(self):
+        d = FIXTURE_CFG.to_dict()
+        for key in ("error_target", "rank_grid", "oversample", "power_iters"):
+            assert key not in d, key
+
+    def test_plan_json_steps_have_no_adaptive_keys(self):
+        doc = json.loads(plan(FIXTURE_SHAPE, jnp.float32,
+                              FIXTURE_CFG).to_json())
+        for key in ("error_target", "rank_grid", "oversample", "power_iters"):
+            assert key not in doc["config"], key
+        for step in doc["schedule"]:
+            assert "rank_grid" not in step
+            assert "tau" not in step
