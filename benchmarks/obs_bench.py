@@ -1,0 +1,146 @@
+"""Tracing-overhead bench: the same warm plan+execute loop with
+:mod:`repro.obs` span tracing ON (events flowing into an in-memory ring
+sink) vs OFF (the default), interleaved rep-by-rep so thermal / scheduler
+drift hits both arms equally.
+
+The contract under test is design constraint #1 of ``repro.obs.trace``:
+*disabled means free, enabled means cheap* — a traced execute emits a
+handful of plain-dict events (execute span, per-solve/sketch spans, cache
+events) whose cost must disappear against even a small device sweep.  The
+row written to ``BENCH_obs.json`` asserts median overhead < 3% on the
+default-tier shapes (run.py merges it into BENCH_summary.json).
+
+Usage:  python -m benchmarks.obs_bench [--smoke | --full]
+                                       [--out BENCH_obs.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+import statistics
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import TuckerConfig
+from repro.core.api import plan as make_plan
+
+from .common import emit
+
+#: overhead ceiling asserted on the default-tier shapes (fraction)
+MAX_OVERHEAD = 0.03
+#: (shape, ranks) cases per tier — big enough that one execute is real
+#: device work, small enough for CI
+CASES = {False: (((64, 48, 32), (12, 10, 8)),
+                 ((64, 64, 64), (16, 16, 16))),
+         True: (((128, 128, 128), (16, 16, 16)),
+                ((192, 128, 96), (16, 16, 16)))}
+REPS = 30     # interleaved samples per arm
+INNER = 8     # executes per sample (amortizes the perf_counter pair)
+
+
+def _time_execs(p, x, inner: int) -> float:
+    # block every call: the contract is on end-to-end execute latency —
+    # unblocked dispatch-only timing would compare span emission against
+    # a fraction of the real work and overstate it wildly
+    t0 = time.perf_counter()
+    for _ in range(inner):
+        jax.block_until_ready(p.execute(x).tucker.core)
+    return (time.perf_counter() - t0) / inner
+
+
+def bench_obs(full: bool = False, reps: int = REPS) -> list[dict]:
+    rows = []
+    was_enabled = obs.enabled()
+    sink = obs.EventBuffer(maxlen=16384)
+    obs.add_sink(sink)
+    try:
+        for shape, ranks in CASES[full]:
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+            cfg = TuckerConfig(ranks=ranks, methods="eig")
+            p = make_plan(shape, x.dtype, cfg)
+            # warm both arms (compile happens exactly once, outside timing)
+            obs.disable()
+            _time_execs(p, x, 1)
+            obs.enable()
+            _time_execs(p, x, 1)
+
+            # order-balanced paired differencing: each rep times the arms
+            # in an OFF-ON-ON-OFF quad, so both the low-frequency load
+            # drift that dwarfs a few dict-build events at these µs scales
+            # AND the measured ~20µs slot-position bias (the second sample
+            # of any back-to-back pair runs slower) cancel within the rep;
+            # the median of the per-rep deltas is the overhead
+            off, diffs = [], []
+            for _ in range(reps):
+                obs.disable()
+                a = _time_execs(p, x, INNER)
+                obs.enable()
+                b = _time_execs(p, x, INNER)
+                c = _time_execs(p, x, INNER)
+                obs.disable()
+                d = _time_execs(p, x, INNER)
+                off.extend((a, d))
+                diffs.append(((b - a) + (c - d)) / 2.0)
+            med_off = statistics.median(off)
+            med_on = med_off + statistics.median(diffs)
+            overhead = statistics.median(diffs) / med_off
+            label = "x".join(map(str, shape))
+            rows.append({
+                "bench": "obs_overhead", "shape": list(shape),
+                "ranks": list(ranks), "reps": reps, "inner": INNER,
+                "off_s": med_off, "on_s": med_on,
+                "overhead": overhead,
+                "events_per_execute": len(sink) / (1 + 2 * reps * INNER),
+                "max_overhead": MAX_OVERHEAD,
+            })
+            emit(f"obs/span_overhead/{label}", med_on - med_off,
+                 f"overhead={overhead * 100:+.2f}%")
+            sink.clear()
+    finally:
+        obs.remove_sink(sink)
+        if was_enabled:
+            obs.enable()
+        else:
+            obs.disable()
+
+    worst = max(r["overhead"] for r in rows)
+    print(f"# tracing overhead worst-case: {worst * 100:+.2f}% "
+          f"(budget {MAX_OVERHEAD * 100:.0f}%)")
+    if not full:
+        assert worst < MAX_OVERHEAD, (
+            f"span-tracing overhead {worst * 100:.2f}% exceeds the "
+            f"{MAX_OVERHEAD * 100:.0f}% budget on default-tier shapes — "
+            "a hot path is doing obs work while disabled, or an enabled "
+            "path grew expensive (check repro.obs.trace design notes)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes (the default tier)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes (no overhead assert)")
+    ap.add_argument("--out", default="BENCH_obs.json",
+                    help="JSON row file path ('' to skip writing)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    rows = bench_obs(full=args.full and not args.smoke)
+    if args.out:
+        doc = {"bench": "obs", "jax_backend": jax.default_backend(),
+               "host": _platform.machine(), "full": args.full, "rows": rows}
+        Path(args.out).write_text(json.dumps(doc, indent=1))
+        print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

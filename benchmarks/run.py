@@ -47,6 +47,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_bench as bb
+    from . import obs_bench as obsb
     from . import order_bench as ob
     from . import paper_figs as pf
     from . import selector_bench as selb
@@ -67,6 +68,7 @@ def main() -> None:
         "fig8": lambda: pf.fig8_matfree(full=args.full),
         "selector": lambda: pf.selector_accuracy(),
         "serve": lambda: svb.bench_serve(full=args.full),
+        "obs": lambda: obsb.bench_obs(full=args.full),
         "sketch": lambda: skb.bench_sketch(
             tier="full" if args.full else "default"),
         # lazy import: forces 8 virtual host devices, which only takes

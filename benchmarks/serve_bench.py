@@ -21,6 +21,15 @@ occupancy rows from ``service.stats()``.
 
 Usage:  python -m benchmarks.serve_bench [--smoke | --full]
                                          [--out BENCH_serve.json]
+                                         [--perfetto trace.json]
+                                         [--drift-report drift.json]
+
+``--perfetto PATH`` replays a small traced slice of the stream through
+fresh services with :mod:`repro.obs` span tracing on and writes a Chrome
+trace-event file (open in Perfetto: submit → wave → compiles → per-mode
+solves on one timeline).  ``--drift-report PATH`` dumps the process
+drift monitor (predicted-vs-actual per platform/backend/solver, fed by
+both arms' traffic) as JSON.
 """
 
 from __future__ import annotations
@@ -149,6 +158,10 @@ def run_service(stream, cfg) -> tuple[dict, list[dict]]:
 
 def bench_serve(full: bool = False, seed: int = 0) -> list[dict]:
     stream, cfg, rate = make_stream(full, seed=seed)
+    return bench_serve_stream(stream, cfg, rate)
+
+
+def bench_serve_stream(stream, cfg, rate) -> list[dict]:
     one = run_oneshot(stream, cfg)
     # fresh arrival clock, same schedule/tensors, for the service arm
     srv, bucket_rows = run_service(stream, cfg)
@@ -165,6 +178,41 @@ def bench_serve(full: bool = False, seed: int = 0) -> list[dict]:
     return [one, srv, *bucket_rows]
 
 
+def export_perfetto(stream, cfg, path: str, n: int = 6) -> None:
+    """Replay the first ``n`` stream tensors through fresh services with
+    tracing on and write the capture as one Perfetto-loadable Chrome
+    trace.  Two passes share the capture so the trace carries the full
+    story: a fused pass against a cleared sweep cache (cache-miss +
+    compile spans on the wave timeline) and a recorded pass (per-mode
+    ``solve`` spans with solver/backend/rank attributes)."""
+    from repro import obs
+    from repro.core.api import _SWEEP_CACHE
+
+    policy = BucketPolicy(grid=8, max_pad_ratio=8.0, pad_mode="mask",
+                          wave_slots=4)
+    with obs.capture() as buf:
+        _SWEEP_CACHE.clear()   # cold start: the slice shows the real compile
+        for record in (False, True):
+            with TuckerService(policy=policy, record=record) as svc:
+                for _, x in stream[:n]:
+                    svc.submit(x, cfg)
+                svc.drain()
+    doc = obs.write_chrome(buf.events(), path)
+    names = {e["name"].split(" ")[0] for e in doc["traceEvents"]}
+    print(f"# perfetto trace: {len(doc['traceEvents'])} events "
+          f"({', '.join(sorted(names))}) -> {path}")
+
+
+def export_drift(path: str) -> None:
+    """Dump the process drift monitor (fed by this run's traffic)."""
+    from repro.obs.drift import MONITOR
+
+    report = MONITOR.report()
+    Path(path).write_text(json.dumps(report, indent=1, default=str))
+    print(f"# drift report: {len(report['cells'])} cells, "
+          f"{len(report['stale'])} stale -> {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -176,15 +224,27 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="stream RNG seed (arrivals, shapes, tensor data) — "
                          "vary for run-to-run noise estimates")
+    ap.add_argument("--perfetto", default=None, metavar="PATH",
+                    help="also export a traced replay slice as a Chrome "
+                         "trace-event file (Perfetto-loadable)")
+    ap.add_argument("--drift-report", default=None, metavar="PATH",
+                    help="also dump the predicted-vs-actual drift report "
+                         "as JSON")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    rows = bench_serve(full=args.full and not args.smoke, seed=args.seed)
+    stream, cfg, rate = make_stream(full=args.full and not args.smoke,
+                                    seed=args.seed)
+    rows = bench_serve_stream(stream, cfg, rate)
     if args.out:
         doc = {"bench": "serve", "jax_backend": jax.default_backend(),
                "host": _platform.machine(), "full": args.full, "rows": rows}
         Path(args.out).write_text(json.dumps(doc, indent=1))
         print(f"wrote {args.out} ({len(rows)} rows)")
+    if args.perfetto:
+        export_perfetto(stream, cfg, args.perfetto)
+    if args.drift_report:
+        export_drift(args.drift_report)
 
 
 if __name__ == "__main__":

@@ -47,6 +47,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from ..obs import drift as _drift
+from ..obs import trace as _obs
 from .backend import backend_names, get_backend, resolve_backend
 from .plan import (
     ModeStep,
@@ -451,6 +453,25 @@ def _make_sweep(p: "TuckerPlan", batched: bool, donate: bool = False) -> Callabl
     return donating
 
 
+def _compile_probe(fn: Callable, p: "TuckerPlan", batched: bool) -> Callable:
+    """Wrap a freshly built sweep so its FIRST invocation — the one that
+    traces and XLA-compiles — is spanned as ``compile`` on the bus (the
+    duration includes the first execution; jit offers no clean split
+    without AOT lowering).  Later calls pass straight through."""
+    state = {"first": True}
+
+    def probed(x):
+        if not state["first"]:
+            return fn(x)
+        state["first"] = False
+        with _obs.span("compile", shape=list(p.shape), dtype=p.dtype,
+                       backend=p.backend, variant=p.config.variant,
+                       batched=batched, includes_first_run=True):
+            return fn(x)
+
+    return probed
+
+
 # ---------------------------------------------------------------------------
 # TuckerPlan
 # ---------------------------------------------------------------------------
@@ -594,9 +615,17 @@ class TuckerPlan:
         key = self._cache_key(batched, donate)
         fn = _SWEEP_CACHE.get(key)
         if fn is None:
-            fn = _SWEEP_CACHE[key] = _make_sweep(self, batched, donate)
+            fn = _SWEEP_CACHE[key] = _compile_probe(
+                _make_sweep(self, batched, donate), self, batched)
             CACHE_STATS["builds"] += 1
+            _obs.event("cache", status="miss", shape=list(self.shape),
+                       dtype=self.dtype, backend=self.backend,
+                       variant=self.config.variant, batched=batched,
+                       donate=donate)
         else:
+            # hits are counted but not published: a per-execute "hit" event
+            # costs real µs on the warm path and says nothing the execute
+            # span + CACHE_STATS don't (misses are the informative events)
             CACHE_STATS["hits"] += 1
         return fn
 
@@ -631,6 +660,23 @@ class TuckerPlan:
         config policy (auto: donate only the device copy this call itself
         materialized from a host array).
         """
+        if not _obs.enabled():
+            return self._execute(x, record=record, donate=donate)
+        attrs = self.__dict__.get("_obs_attrs")
+        if attrs is None:
+            # static per-plan span attributes, built once: the properties
+            # walk the schedule and would otherwise run on every execute
+            attrs = self._obs_attrs = dict(
+                shape=list(self.shape), dtype=self.dtype,
+                backend=self.backend, variant=self.config.variant,
+                adaptive=self.is_adaptive,
+                predicted_s=self.total_predicted_s,
+                peak_bytes=self.peak_bytes)
+        with _obs.span("execute", record=record, **attrs):
+            return self._execute(x, record=record, donate=donate)
+
+    def _execute(self, x: jax.Array, *, record: bool = False,
+                 donate: bool | None = None) -> SthosvdResult:
         xin = x
         x = jnp.asarray(x)
         if tuple(x.shape) != self.shape:
@@ -691,15 +737,28 @@ class TuckerPlan:
                 block_until_ready=True)
             factors = [fdict[m] for m in range(n)]
             seconds = list(seconds)
+            platform = jax.default_backend()
             for step in steps[n:]:
                 y = x
                 for m, u in enumerate(factors):
                     if m != step.mode:
                         y = T.ttm(y, u.T, m)
+                wall0 = _time.time()
                 t0 = _time.perf_counter()
                 res = solve_step(y, step, als_iters=cfg.als_iters)
                 jax.block_until_ready(res.u)
-                seconds.append(_time.perf_counter() - t0)
+                dt = _time.perf_counter() - t0
+                seconds.append(dt)
+                _obs.event("span", t=wall0, name="solve", dur_s=dt,
+                           mode=step.mode, solver=step.method,
+                           backend=step.backend, platform=platform,
+                           rank=step.r_n, i_n=step.i_n, j_n=step.j_n,
+                           predicted_s=step.predicted_s)
+                _drift.MONITOR.observe(platform=platform,
+                                       backend=step.backend,
+                                       solver=step.method,
+                                       predicted_s=step.predicted_s,
+                                       actual_s=dt, source="execute")
                 factors[step.mode] = res.u
             core = x
             for mode, u in enumerate(factors):
@@ -774,7 +833,9 @@ class TuckerPlan:
         factors: dict[int, jax.Array] = {}
         seconds: list[float] = []
         js: list[int] = []
+        platform = jax.default_backend()
         for s in self.schedule:
+            wall0 = _time.time()
             t0 = _time.perf_counter()
             js.append(int(y.size // y.shape[s.mode]))
             width_cap = min(s.i_n, s.rank_grid[-1] + cfg.oversample)
@@ -814,7 +875,19 @@ class TuckerPlan:
             ttm = backend_ops(s.backend)[0]
             y = ttm(b, v.T, s.mode).astype(wdtype)
             jax.block_until_ready(y)
-            seconds.append(_time.perf_counter() - t0)
+            dt = _time.perf_counter() - t0
+            seconds.append(dt)
+            # retroactive span (no enter/exit to leak on solver errors):
+            # same shape a live Span emits, parented under the execute span
+            _obs.event("span", t=wall0, name="sketch", dur_s=dt,
+                       mode=s.mode, solver="rand", backend=s.backend,
+                       platform=platform, i_n=s.i_n, rank=int(r),
+                       tail_err=tail / total, width=int(width), j_n=js[-1],
+                       predicted_s=s.predicted_s)
+            _drift.MONITOR.observe(platform=platform, backend=s.backend,
+                                   solver="rand",
+                                   predicted_s=s.predicted_s, actual_s=dt,
+                                   source="execute")
         ranks = tuple(chosen[m] for m in range(len(self.shape)))
         return ranks, tails, factors, y, seconds, js
 
@@ -1128,6 +1201,22 @@ def plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
     (:func:`_plan_adaptive`): the plan freezes a rank policy and sweep
     order; per-mode ranks resolve per input at execute time.
     """
+    if not _obs.enabled():
+        return _plan(shape, dtype, config, selector=selector)
+    with _obs.span("plan", shape=[int(s) for s in shape],
+                   dtype=str(jnp.dtype(dtype)), impl=config.impl,
+                   variant=config.variant,
+                   mode_order=str(config.mode_order),
+                   adaptive=config.error_target is not None) as sp:
+        p = _plan(shape, dtype, config, selector=selector)
+        sp.set(backend=p.backend, n_steps=len(p.schedule),
+               methods=list(p.methods), select_s=p.select_seconds,
+               predicted_s=p.total_predicted_s, peak_bytes=p.peak_bytes)
+        return p
+
+
+def _plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
+          selector: Callable[..., str] | None = None) -> TuckerPlan:
     shape = tuple(int(s) for s in shape)
     dtype = jnp.dtype(dtype)
     if config.error_target is not None:

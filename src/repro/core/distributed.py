@@ -46,6 +46,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..obs import drift as _drift
+from ..obs import trace as _obs
 from . import tensor_ops as T
 from .plan import ModeStep, solve_step
 from .solvers import DEFAULT_ALS_ITERS, als_solve
@@ -276,7 +278,9 @@ def run_sharded_schedule(x: jax.Array, steps, mesh: Mesh, axis: str, *,
     y = x
     factors: dict[int, jax.Array] = {}
     seconds: list[float] = []
+    platform = jax.default_backend()
     for batch in iter_groups(steps):
+        wall0 = time.time()
         t0 = time.perf_counter()
         if len(batch) == 1:
             u, y = solve_step_sharded(y, batch[0], mesh, axis,
@@ -290,6 +294,20 @@ def run_sharded_schedule(x: jax.Array, steps, mesh: Mesh, axis: str, *,
             jax.block_until_ready(y)
         dt = time.perf_counter() - t0
         seconds.extend([dt / len(batch)] * len(batch))
+        if block_until_ready:
+            for s in batch:
+                # group wall-clock attributed evenly, matching ``seconds``
+                _obs.event("span", t=wall0, name="solve",
+                           dur_s=dt / len(batch), mode=s.mode,
+                           solver=s.method, backend="sharded",
+                           platform=platform, rank=s.r_n, i_n=s.i_n,
+                           j_n=s.j_n, n_shards=s.n_shards,
+                           group=s.group, predicted_s=s.predicted_s)
+                _drift.MONITOR.observe(platform=platform, backend="sharded",
+                                       solver=s.method,
+                                       predicted_s=s.predicted_s,
+                                       actual_s=dt / len(batch),
+                                       source="execute")
     return y, factors, seconds
 
 

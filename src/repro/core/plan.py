@@ -27,6 +27,8 @@ from typing import Callable, Sequence
 
 import jax
 
+from ..obs import drift as _drift
+from ..obs import trace as _obs
 from . import tensor_ops as T
 from .backend import get_backend
 from .cost_model import als_flops, eig_flops, rand_flops, svd_flops
@@ -619,14 +621,32 @@ def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
     y = x
     factors: dict[int, jax.Array] = {}
     seconds: list[float] = []
+    platform = jax.default_backend()
     for step in steps:
+        wall0 = time.time()
         t0 = time.perf_counter()
         res = solve_step(y if sequential else x, step,
                          als_iters=als_iters, oversample=oversample,
                          power_iters=power_iters, impl=impl)
         if block_until_ready:
             jax.block_until_ready(res.y_new)
-        seconds.append(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            # the eager per-step path is the only place a mode solve has
+            # real wall-clock: span it retroactively (no enter/exit to
+            # leak on solver errors) and feed predicted-vs-actual drift
+            _obs.event("span", t=wall0, name="solve", dur_s=dt,
+                       mode=step.mode, solver=step.method,
+                       backend=impl or step.backend, platform=platform,
+                       rank=step.r_n, i_n=step.i_n, j_n=step.j_n,
+                       predicted_s=step.predicted_s)
+            _drift.MONITOR.observe(platform=platform,
+                                   backend=impl or step.backend,
+                                   solver=step.method,
+                                   predicted_s=step.predicted_s,
+                                   actual_s=dt, source="execute")
+        else:
+            dt = time.perf_counter() - t0
+        seconds.append(dt)
         factors[step.mode] = res.u
         if sequential:
             y = res.y_new

@@ -84,10 +84,12 @@ from ``TuckerConfig``.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass
 from itertools import combinations, product
 from typing import Sequence
 
+from ..obs import trace as _obs
 from .cost_model import DEFAULT_COST_MODEL, CostModel
 from .solvers import DEFAULT_ALS_ITERS
 
@@ -291,6 +293,7 @@ def optimize_schedule(
     message names the cheapest-memory step (or group) that still exceeds it
     at the deepest reachable state (the *binding* step).
     """
+    wall0, t0 = time.time(), time.perf_counter()
     shape = tuple(int(s) for s in shape)
     ranks = tuple(int(r) for r in ranks)
     n = len(shape)
@@ -369,12 +372,18 @@ def optimize_schedule(
     groups.reverse()
     meths.reverse()
     rkss.reverse()
-    return ScheduleSearch(
+    result = ScheduleSearch(
         order=tuple(m for g in groups for m in g),
         methods=tuple(q for a in meths for q in a),
         total_cost=best[full][0], calibrated=cm.calibrated,
         n_states=len(best), groups=tuple(groups),
         ranks=tuple(r for rks in rkss for r in rks))
+    _obs.event("span", t=wall0, name="plan.dp_search",
+               dur_s=time.perf_counter() - t0, shape=list(shape),
+               n_states=result.n_states, order=list(result.order),
+               methods=list(result.methods), max_group=max_group,
+               calibrated=result.calibrated, total_cost=result.total_cost)
+    return result
 
 
 def optimize_grouping(
@@ -398,6 +407,7 @@ def optimize_grouping(
     sequential step).  Solver choice per member follows the same rules as
     :func:`optimize_schedule`.  ``max_group=None`` allows groups up to the
     full tensor order."""
+    wall0, t0 = time.time(), time.perf_counter()
     shape = tuple(int(s) for s in shape)
     ranks = tuple(int(r) for r in ranks)
     order = tuple(int(m) for m in order)
@@ -463,11 +473,16 @@ def optimize_grouping(
     groups.reverse()
     meths.reverse()
     rkss.reverse()
-    return ScheduleSearch(
+    result = ScheduleSearch(
         order=order, methods=tuple(q for a in meths for q in a),
         total_cost=dp[n][0], calibrated=cm.calibrated,
         n_states=len(dp), groups=tuple(groups),
         ranks=tuple(r for rks in rkss for r in rks))
+    _obs.event("span", t=wall0, name="plan.dp_grouping",
+               dur_s=time.perf_counter() - t0, shape=list(shape),
+               order=list(order), groups=[list(g) for g in result.groups],
+               calibrated=result.calibrated, total_cost=result.total_cost)
+    return result
 
 
 def _min_peak_binding(shape, ranks, methods, als_iters, itemsize, n_shards,

@@ -20,6 +20,7 @@ from typing import Callable, Sequence
 
 import jax
 
+from ..obs import trace as _obs
 from . import tensor_ops as T
 from .solvers import ALS, DEFAULT_ALS_ITERS, EIG, SVD
 
@@ -161,9 +162,11 @@ def sthosvd(
         itemsize=x.dtype.itemsize, backend=backend.name,
         memory_cap_bytes=memory_cap_bytes)
 
-    core, factors, seconds = run_schedule(
-        x, schedule, sequential=True, als_iters=als_iters,
-        block_until_ready=block_until_ready)
+    with _obs.span("execute", shape=list(x.shape), dtype=str(x.dtype),
+                   backend=backend.name, variant="sthosvd", legacy=True):
+        core, factors, seconds = run_schedule(
+            x, schedule, sequential=True, als_iters=als_iters,
+            block_until_ready=block_until_ready)
     trace = [ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, dt,
                        backend=s.backend, predicted_s=s.predicted_s)
              for s, dt in zip(schedule, seconds)]

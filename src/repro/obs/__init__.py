@@ -1,0 +1,45 @@
+"""repro.obs — unified observability: span tracing, metrics, drift.
+
+One event bus for the whole a-Tucker stack (:mod:`repro.obs.trace`),
+exporters to Chrome-trace/Perfetto and JSONL (:mod:`repro.obs.export`),
+a Prometheus-style metrics registry (:mod:`repro.obs.metrics`), and a
+predicted-vs-actual drift monitor that recommends ``repro.tune``
+reruns when calibrations go stale (:mod:`repro.obs.drift`).
+
+Quick start::
+
+    from repro import obs
+
+    with obs.capture() as buf:          # enables tracing for the block
+        p = plan(x.shape, x.dtype, cfg)
+        p.execute(x)
+    obs.write_chrome(buf.events(), "trace.json")   # open in Perfetto
+
+    print(obs.REGISTRY.render())        # Prometheus text exposition
+    print(obs.MONITOR.report())         # predicted-vs-actual drift
+
+Span tracing is OFF by default; enable with ``obs.enable()``, the
+``ATUCKER_OBS=1`` env var, or an ``obs.capture()`` block.  The drift
+monitor is fed directly by the execution layers and stays on always.
+CLI: ``python -m repro.obs report|export``.
+"""
+
+from .trace import (EventBuffer, add_sink, capture, disable, enable,
+                    enabled, event, iter_spans, remove_sink, span)
+from .metrics import (REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
+                      absorb_service_stats)
+from .export import read_jsonl, to_chrome, write_chrome, write_jsonl
+from .drift import MONITOR, DriftMonitor, MemoryWatch
+
+__all__ = [
+    # trace
+    "EventBuffer", "add_sink", "capture", "disable", "enable", "enabled",
+    "event", "iter_spans", "remove_sink", "span",
+    # metrics
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "absorb_service_stats",
+    # export
+    "read_jsonl", "to_chrome", "write_chrome", "write_jsonl",
+    # drift
+    "MONITOR", "DriftMonitor", "MemoryWatch",
+]

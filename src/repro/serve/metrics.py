@@ -39,19 +39,29 @@ class LatencyWindow:
         self.count += 1
         self.total_s += float(seconds)
 
-    def percentile(self, q: float) -> float:
-        """q-th percentile (0..100) of the window in SECONDS; 0.0 empty."""
-        if not self._window:
+    @staticmethod
+    def _interp(xs: list, q: float) -> float:
+        """q-th percentile of an already-sorted sample list."""
+        if not xs:
             return 0.0
-        xs = sorted(self._window)
         rank = (len(xs) - 1) * q / 100.0
         lo = math.floor(rank)
         hi = min(lo + 1, len(xs) - 1)
         return xs[lo] + (xs[hi] - xs[lo]) * (rank - lo)
 
+    def percentile(self, q: float) -> float:
+        """q-th percentile (0..100) of the window in SECONDS; 0.0 empty."""
+        return self._interp(sorted(self._window), q)
+
     def snapshot_ms(self) -> dict:
-        out = {label: self.percentile(q) * 1e3 for label, q in PERCENTILES}
+        # one sort for all percentiles (snapshot_ms used to re-sort the
+        # window per percentile — 3x per snapshot)
+        xs = sorted(self._window)
+        out = {label: self._interp(xs, q) * 1e3 for label, q in PERCENTILES}
         out["mean_ms"] = (self.total_s / self.count * 1e3) if self.count else 0.0
+        # windowed mean, over the same samples the percentiles saw — the
+        # lifetime mean_ms can sit far from p50 after a traffic shift
+        out["window_mean_ms"] = (sum(xs) / len(xs) * 1e3) if xs else 0.0
         return out
 
 
@@ -127,24 +137,47 @@ class TraceWriter:
     The file handle opens lazily and every event is flushed — a crashed
     service leaves a readable trace (the same interrupted-append tolerance
     the tune store practices).
+
+    A writer also works as a :mod:`repro.obs` event-bus sink
+    (``obs.add_sink(writer.handle)``): bus events are plain dicts in the
+    same schema, so span and cache events land in the same JSONL stream
+    the serve events always used.
+
+    ``event()`` after :meth:`close` raises ``ValueError`` — it used to
+    silently reopen the file, so a "closed" trace kept growing.
     """
 
     def __init__(self, path: str | Path):
         self.path = Path(path)
         self._lock = threading.Lock()
         self._fh = None
+        self._closed = False
 
-    def event(self, kind: str, **fields) -> None:
-        line = json.dumps({"t": time.time(), "kind": kind, **fields})
+    def _write(self, obj: dict) -> None:
+        line = json.dumps(obj, default=repr)
         with self._lock:
+            if self._closed:
+                raise ValueError(
+                    f"TraceWriter for {self.path} is closed; events after "
+                    "close() are a bug in the caller (the writer used to "
+                    "silently reopen the file here)")
             if self._fh is None:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
                 self._fh = self.path.open("a")
             self._fh.write(line + "\n")
             self._fh.flush()
 
+    def event(self, kind: str, **fields) -> None:
+        self._write({"t": time.time(), "kind": kind, **fields})
+
+    def handle(self, evt: dict) -> None:
+        """Event-bus sink adapter: append one already-shaped event dict
+        (``{"t": ..., "kind": ..., ...}``) as a JSONL line."""
+        self._write(evt)
+
     def close(self) -> None:
         with self._lock:
+            self._closed = True
             if self._fh is not None:
                 self._fh.close()
                 self._fh = None

@@ -46,8 +46,10 @@ from dataclasses import dataclass, field, replace
 import jax
 import jax.numpy as jnp
 
-from ..core.api import TuckerConfig, TuckerPlan, plan as make_plan
+from ..core.api import CACHE_STATS, TuckerConfig, TuckerPlan, plan as make_plan
 from ..core.plan import validate_ranks
+from ..obs import drift as _drift
+from ..obs import trace as _obs
 from ..core.sthosvd import SthosvdResult
 from .buckets import BucketPolicy, pad_block, pad_waste, slice_valid, trim_result
 from .metrics import BucketMetrics, LatencyWindow, TraceWriter
@@ -187,6 +189,17 @@ class TuckerService:
         self._running = False
         self._closed = False
 
+    # -- tracing -------------------------------------------------------------
+    def _emit(self, kind: str, **fields) -> None:
+        """One serve event, to BOTH sinks: the service's own JSONL
+        TraceWriter (when ``trace_path`` was given — schema unchanged) and
+        the process-wide :mod:`repro.obs` event bus (no-op unless tracing
+        is enabled), so a bus capture ties serve lifecycle events to the
+        plan/execute/compile spans underneath them."""
+        if self._trace:
+            self._trace.event(kind, **fields)
+        _obs.event(kind, **fields)
+
     # -- config pinning (the engine's fleet-operator knobs) ------------------
     def _pinned(self, config: TuckerConfig) -> TuckerConfig:
         from ..core.backend import get_backend
@@ -281,9 +294,8 @@ class TuckerService:
                 if self._backpressure == "reject":
                     bs.metrics.rejected += 1
                     self._counters["rejected"] += 1
-                    if self._trace:
-                        self._trace.event("reject", rid=rid, shape=list(shape),
-                                          bucket=list(bshape))
+                    self._emit("reject", rid=rid, shape=list(shape),
+                               bucket=list(bshape))
                     raise RejectedError(
                         f"admission queue full ({self._max_queue} pending); "
                         "retry later or use backpressure='block'")
@@ -295,9 +307,8 @@ class TuckerService:
                 raise RejectedError(
                     "queue full under backpressure='block' with no worker "
                     "running and no runnable wave")
-        if self._trace:
-            self._trace.event("submit", rid=job.rid, shape=list(shape),
-                              bucket=list(bshape), padded=shape != bshape)
+        self._emit("submit", rid=job.rid, shape=list(shape),
+                   bucket=list(bshape), padded=shape != bshape)
         return Ticket(rid=job.rid, shape=shape, bucket=bshape,
                       padded=shape != bshape, submitted_at=time.time(),
                       _job=job)
@@ -457,15 +468,41 @@ class TuckerService:
                     j.event.set()
                 self._space.notify_all()
                 self._idle.notify_all()
-            if self._trace:
-                self._trace.event("wave", bucket=list(bshape),
-                                  lanes=lanes, filled=len(jobs),
-                                  pad_mode=self._policy.pad_mode,
-                                  wall_s=round(t_done - t_start, 6))
-                for kind, fields in events:
-                    self._trace.event(kind, **fields)
+            self._emit("wave", bucket=list(bshape),
+                       lanes=lanes, filled=len(jobs),
+                       pad_mode=self._policy.pad_mode,
+                       wall_s=round(t_done - t_start, 6))
+            for kind, fields in events:
+                self._emit(kind, **fields)
+            if not record:
+                # recorded waves fed drift per step (source="execute")
+                # inside plan.execute already; here the only measurement
+                # is the wave wall-clock, so amortize it across the wave's
+                # completed jobs and attribute each job's share across its
+                # plan's steps proportionally to their predictions — the
+                # serve-traffic view of predicted-vs-actual calibration
+                self._observe_wave_drift(done, t_done - t_start)
 
         return finish
+
+    @staticmethod
+    def _observe_wave_drift(done, wall_s: float) -> None:
+        ok = [(j, p) for j, res, p, err in done
+              if err is None and p is not None]
+        if not ok or wall_s <= 0.0:
+            return
+        per_job = wall_s / len(ok)
+        platform = jax.default_backend()
+        for _, p in ok:
+            total_pred = p.total_predicted_s
+            if total_pred <= 0.0:
+                continue
+            for s in p.schedule:
+                _drift.MONITOR.observe(
+                    platform=platform, backend=s.backend, solver=s.method,
+                    predicted_s=s.predicted_s,
+                    actual_s=per_job * (s.predicted_s / total_pred),
+                    source="serve")
 
     def _lane_fill(self, stack, n: int, p: TuckerPlan):
         """Round the wave's batch up to the policy's lane count with
@@ -661,4 +698,9 @@ class TuckerService:
                                   if elapsed > 0 else 0.0,
                 "latency": self._latency.snapshot_ms(),
                 "buckets": buckets,
+                # process-wide observability riding the operator snapshot:
+                # compile-cache behaviour and predicted-vs-actual drift
+                # (stale cells name the repro.tune rerun that repairs them)
+                "sweep_cache": dict(CACHE_STATS),
+                "drift": _drift.MONITOR.summary(),
             }
