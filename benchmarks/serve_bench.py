@@ -122,7 +122,9 @@ def run_oneshot(stream, cfg) -> dict:
             "throughput_rps": len(stream) / total, **lat.snapshot_ms()}
 
 
-def run_service(stream, cfg) -> tuple[dict, list[dict]]:
+def run_service(stream, cfg, *, arm: str = "service",
+                submit_kw: dict | None = None) -> tuple[dict, list[dict]]:
+    submit_kw = submit_kw or {}
     svc = TuckerService(
         policy=BucketPolicy(grid=8, max_pad_ratio=8.0, pad_mode="mask",
                             wave_slots=8),
@@ -132,7 +134,7 @@ def run_service(stream, cfg) -> tuple[dict, list[dict]]:
     tickets = []
 
     def submit(arrival, x, t0):
-        tickets.append(svc.submit(x, cfg))
+        tickets.append(svc.submit(x, cfg, **submit_kw))
 
     t0 = _replay(stream, submit)
     for t in tickets:
@@ -140,14 +142,14 @@ def run_service(stream, cfg) -> tuple[dict, list[dict]]:
     total = time.perf_counter() - t0
     stats = svc.stats()
     svc.stop()
-    row = {"bench": "serve_stream", "arm": "service", "n": len(stream),
+    row = {"bench": "serve_stream", "arm": arm, "n": len(stream),
            "plans_built": stats["plans_built"],
            "throughput_rps": len(stream) / total,
            "pad_waste": stats["pad_waste"],
            "max_inflight_waves": stats["max_inflight_waves"],
            **stats["latency"]}
     bucket_rows = [
-        {"bench": "bucket", "arm": "service", "bucket": label,
+        {"bench": "bucket", "arm": arm, "bucket": label,
          "completed": b["completed"], "waves": b["waves"],
          "pad_waste": b["pad_waste"], "occupancy": b["occupancy"],
          "pipeline_occupancy": b["pipeline_occupancy"],
@@ -176,6 +178,50 @@ def bench_serve_stream(stream, cfg, rate) -> list[dict]:
     print(f"# continuous batching throughput win: {srv['win']:.2f}x "
           f"({srv['throughput_rps']:.1f} vs {one['throughput_rps']:.1f} rps)")
     return [one, srv, *bucket_rows]
+
+
+#: clean-path overhead budget for the resilience machinery (acceptance:
+#: guarded throughput within 3% of bare on the same stream)
+RESILIENCE_BUDGET = 0.03
+#: per-request guards the "guarded" arm turns on — a generous deadline and
+#: a retry budget cost bookkeeping only on the clean path; the admission
+#: finite-check is the one real extra device op per request
+GUARDED_SUBMIT = {"validate": "finite", "deadline_s": 600.0, "retries": 1}
+
+
+def bench_resilience(full: bool = False, seed: int = 0) -> list[dict]:
+    """Clean-path cost of the resilience machinery.
+
+    The SAME arrival schedule runs through the service twice: ``bare``
+    (``validate="none"``, no deadline, no retries — the machinery is
+    compiled in but every guard is off) and ``guarded`` (admission
+    finite-check, a deadline, a retry budget).  A guarded warmup pass runs
+    first and is discarded, so neither measured arm pays first-touch
+    planning or compiles.  The emitted row asserts the guarded arm keeps
+    within ``RESILIENCE_BUDGET`` of bare throughput.
+    """
+    stream, cfg, rate = make_stream(full, seed=seed)
+    run_service(stream, cfg, arm="warmup", submit_kw=GUARDED_SUBMIT)
+    bare, _ = run_service(stream, cfg, arm="bare",
+                          submit_kw={"validate": "none"})
+    guarded, _ = run_service(stream, cfg, arm="guarded",
+                             submit_kw=GUARDED_SUBMIT)
+    regression = 1.0 - guarded["throughput_rps"] / bare["throughput_rps"]
+    row = {"bench": "serve_resilience", "arm": "guarded_vs_bare",
+           "n": len(stream), "arrival_rps": rate,
+           "bare_rps": bare["throughput_rps"],
+           "guarded_rps": guarded["throughput_rps"],
+           "bare_p95_ms": bare["p95_ms"], "guarded_p95_ms": guarded["p95_ms"],
+           "regression_pct": round(100.0 * regression, 3),
+           "budget_pct": 100.0 * RESILIENCE_BUDGET,
+           "pass": regression < RESILIENCE_BUDGET}
+    for r in (bare, guarded):
+        emit(f"serve/resilience/{r['arm']}", 1.0 / r["throughput_rps"],
+             f"p95_ms={r['p95_ms']:.1f}")
+    print(f"# resilience clean-path regression: {row['regression_pct']:.2f}% "
+          f"(budget {row['budget_pct']:.0f}%) -> "
+          f"{'PASS' if row['pass'] else 'FAIL'}")
+    return [bare, guarded, row]
 
 
 def export_perfetto(stream, cfg, path: str, n: int = 6) -> None:
@@ -221,6 +267,11 @@ def main() -> None:
                     help="paper-scale stream (minutes on 1 CPU core)")
     ap.add_argument("--out", default="BENCH_serve.json",
                     help="JSON row file path ('' to skip writing)")
+    ap.add_argument("--resilience", action="store_true",
+                    help="measure the clean-path cost of the resilience "
+                         "machinery (guarded vs bare submissions) instead "
+                         "of the oneshot-vs-service stream comparison; "
+                         "exits nonzero if the regression budget is blown")
     ap.add_argument("--seed", type=int, default=0,
                     help="stream RNG seed (arrivals, shapes, tensor data) — "
                          "vary for run-to-run noise estimates")
@@ -233,18 +284,26 @@ def main() -> None:
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    stream, cfg, rate = make_stream(full=args.full and not args.smoke,
-                                    seed=args.seed)
-    rows = bench_serve_stream(stream, cfg, rate)
+    full = args.full and not args.smoke
+    if args.resilience:
+        rows = bench_resilience(full=full, seed=args.seed)
+        stream = cfg = None
+    else:
+        stream, cfg, rate = make_stream(full=full, seed=args.seed)
+        rows = bench_serve_stream(stream, cfg, rate)
     if args.out:
-        doc = {"bench": "serve", "jax_backend": jax.default_backend(),
+        doc = {"bench": "serve_resilience" if args.resilience else "serve",
+               "jax_backend": jax.default_backend(),
                "host": _platform.machine(), "full": args.full, "rows": rows}
         Path(args.out).write_text(json.dumps(doc, indent=1))
         print(f"wrote {args.out} ({len(rows)} rows)")
-    if args.perfetto:
+    if args.perfetto and stream is not None:
         export_perfetto(stream, cfg, args.perfetto)
     if args.drift_report:
         export_drift(args.drift_report)
+    if args.resilience and not all(r.get("pass", True) for r in rows):
+        raise SystemExit("resilience clean-path regression budget blown "
+                         "(see the serve_resilience row)")
 
 
 if __name__ == "__main__":

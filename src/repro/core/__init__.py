@@ -38,6 +38,9 @@ from .backend import (
     resolve_backend,
 )
 from .cost_model import DEFAULT_COST_MODEL, CostModel
+from .errors import (CancelledError, DeadlineError, InputError,
+                     NumericalError, ResourceError, TuckerError,
+                     check_finite, classify_exception, coerce_exception)
 from .plan import ModeStep, resolve_schedule
 from .schedule_opt import (MemoryCapError, ScheduleSearch,
                            optimize_grouping, optimize_schedule)
@@ -55,10 +58,12 @@ from .sthosvd import (
 
 __all__ = [
     "ALS", "DEFAULT_COST_MODEL", "EIG", "RAND", "SVD",
-    "CostModel", "MemoryCapError", "ModeStep", "OpsBackend",
-    "ScheduleSearch", "Selector", "SthosvdResult",
-    "TuckerConfig", "TuckerPlan", "TuckerTensor",
-    "als_solve", "backend", "backend_names", "cost_model", "decompose",
+    "CancelledError", "CostModel", "DeadlineError", "InputError",
+    "MemoryCapError", "ModeStep", "NumericalError", "OpsBackend",
+    "ResourceError", "ScheduleSearch", "Selector", "SthosvdResult",
+    "TuckerConfig", "TuckerError", "TuckerPlan", "TuckerTensor",
+    "als_solve", "backend", "backend_names", "check_finite",
+    "classify_exception", "coerce_exception", "cost_model", "decompose",
     "default_selector", "eig_solve", "extract_features", "get_backend",
     "mesh_from_spec", "mesh_spec", "optimize_grouping",
     "optimize_schedule", "plan", "plan_lib",

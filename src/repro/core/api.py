@@ -47,9 +47,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from .. import chaos as _chaos
 from ..obs import drift as _drift
+from ..obs import metrics as _metrics
 from ..obs import trace as _obs
 from .backend import backend_names, get_backend, resolve_backend
+from .errors import (CancelledError, DeadlineError, InputError,
+                     NumericalError, ResourceError, TuckerError,
+                     check_finite, check_result_finite, classify_exception)
 from .plan import (
     ModeStep,
     TimedSelector,
@@ -644,7 +649,8 @@ class TuckerPlan:
 
     # -- execution -----------------------------------------------------------
     def execute(self, x: jax.Array, *, record: bool = False,
-                donate: bool | None = None) -> SthosvdResult:
+                donate: bool | None = None,
+                validate: str | None = None) -> SthosvdResult:
         """Run the frozen schedule on ``x`` as one compiled program.
 
         ``record=True`` (or an active :func:`repro.tune.recording` context)
@@ -659,9 +665,26 @@ class TuckerPlan:
         after the call), ``False`` never donates, ``None`` follows the
         config policy (auto: donate only the device copy this call itself
         materialized from a host array).
+
+        ``validate="finite"`` rejects NaN/Inf inputs up front with
+        :class:`~repro.core.errors.InputError` naming the offending mode,
+        and checks the sweep's outputs (raising
+        :class:`~repro.core.errors.NumericalError`, which the fallback
+        ladder then gets a chance to recover).  The output check forces a
+        device sync, so it is opt-in — the serve layer validates at
+        ``submit()`` and quarantines poisoned lanes itself.
+
+        On a classified failure (see :mod:`repro.core.errors`) execution
+        degrades along a bounded deterministic ladder — als→eig on
+        numerical breakdown, pallas→matfree on a kernel failure,
+        donated→undonated then replanned-under-a-tighter-cap on runtime
+        OOM — each hop emitted as an obs ``fallback`` event and counted in
+        the metrics registry before the failing class is re-raised only
+        once the ladder is exhausted.
         """
         if not _obs.enabled():
-            return self._execute(x, record=record, donate=donate)
+            return self._execute(x, record=record, donate=donate,
+                                 validate=validate)
         attrs = self.__dict__.get("_obs_attrs")
         if attrs is None:
             # static per-plan span attributes, built once: the properties
@@ -673,38 +696,80 @@ class TuckerPlan:
                 predicted_s=self.total_predicted_s,
                 peak_bytes=self.peak_bytes)
         with _obs.span("execute", record=record, **attrs):
-            return self._execute(x, record=record, donate=donate)
+            return self._execute(x, record=record, donate=donate,
+                                 validate=validate)
 
     def _execute(self, x: jax.Array, *, record: bool = False,
-                 donate: bool | None = None) -> SthosvdResult:
+                 donate: bool | None = None,
+                 validate: str | None = None) -> SthosvdResult:
         xin = x
         x = jnp.asarray(x)
         if tuple(x.shape) != self.shape:
-            raise ValueError(f"plan is for shape {self.shape}, got {x.shape}")
+            raise InputError(f"plan is for shape {self.shape}, got {x.shape}")
         if str(x.dtype) != self.dtype:
-            raise ValueError(f"plan is for dtype {self.dtype}, got {x.dtype}")
-        if self.is_adaptive:
-            return self._execute_adaptive(x, record=record)
-        # sys.modules probe: plans that never meet repro.tune pay nothing
-        tune = sys.modules.get("repro.tune")
-        sink = tune.active_sink() if tune is not None else None
-        if (record or sink is not None) and self.backend != "sharded":
-            return self._execute_recorded(x, sink)
-        if record:   # sharded + explicit record: fail loud, not silent
+            raise InputError(f"plan is for dtype {self.dtype}, got {x.dtype}")
+        if validate not in (None, "none", "finite"):
             raise ValueError(
-                "record=True needs the eager per-step runner, which sharded "
-                "plans do not have (the shard_map sweep is one program); "
-                "collect sharded measurements via sthosvd_distributed")
-        donate_now = self._resolve_donate(created=x is not xin,
-                                          override=donate)
-        core, factors = self._sweep(batched=False, donate=donate_now)(
-            self._place_input(x))
-        return SthosvdResult(
-            tucker=TuckerTensor(core=core, factors=list(factors)),
-            trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
-                             backend=s.backend, predicted_s=s.predicted_s)
-                   for s in self.schedule],
-            select_overhead_s=0.0)
+                f"validate must be None, 'none' or 'finite', got {validate!r}")
+        if validate == "finite":
+            check_finite(x, name="input")
+        if self.is_adaptive:
+            try:
+                return self._execute_adaptive(x, record=record)
+            except Exception as e:
+                terr = classify_exception(e)
+                if terr is not None and terr is not e:
+                    raise terr from e
+                raise
+        created = x is not xin
+
+        def can_retry() -> bool:
+            # a failed donated sweep consumed the device copy; retry is
+            # possible only while the caller's original buffer survives to
+            # re-materialize from (always true for host inputs)
+            nonlocal x, created
+            d = getattr(x, "is_deleted", None)
+            if d is None or not d():
+                return True
+            x2 = jnp.asarray(xin)
+            d2 = getattr(x2, "is_deleted", None)
+            if d2 is not None and d2():
+                return False
+            x, created = x2, x2 is not xin
+            return True
+
+        def run(p: "TuckerPlan", donate_override: bool | None) -> SthosvdResult:
+            # sys.modules probe: plans that never meet repro.tune pay nothing
+            tune = sys.modules.get("repro.tune")
+            sink = tune.active_sink() if tune is not None else None
+            if (record or sink is not None) and p.backend != "sharded":
+                return p._execute_recorded(x, sink)
+            if record:   # sharded + explicit record: fail loud, not silent
+                raise ValueError(
+                    "record=True needs the eager per-step runner, which "
+                    "sharded plans do not have (the shard_map sweep is one "
+                    "program); collect sharded measurements via "
+                    "sthosvd_distributed")
+            donate_now = p._resolve_donate(created=created,
+                                           override=donate_override)
+            _chaos.fire("sweep", backend=p.backend)
+            core, factors = p._sweep(batched=False, donate=donate_now)(
+                p._place_input(x))
+            if _chaos.active() and _chaos.poison("sweep_out",
+                                                 backend=p.backend):
+                core = core * float("nan")
+            if validate == "finite":
+                check_result_finite(core, factors,
+                                    context=f"{p.config.variant} sweep")
+            return SthosvdResult(
+                tucker=TuckerTensor(core=core, factors=list(factors)),
+                trace=[ModeTrace(s.mode, s.method, s.i_n, s.r_n, s.j_n, 0.0,
+                                 backend=s.backend,
+                                 predicted_s=s.predicted_s)
+                       for s in p.schedule],
+                select_overhead_s=0.0)
+
+        return _run_with_fallback(self, can_retry, run, donate)
 
     def _execute_recorded(self, x: jax.Array, sink=None) -> SthosvdResult:
         """Eager mirror of the fused sweeps with per-step wall-clock; feeds
@@ -811,10 +876,12 @@ class TuckerPlan:
         linear-in-I_n advantage).  Doubling keeps total sketch work within
         2× of the final width's.
 
-        Returns ``(ranks, tails, factors, core, seconds, js)``: per-mode
-        chosen ranks and fractional tails, the sketch's own orthonormal
-        factors, the shrunk core, per-step wall-clock, and the actual
-        (shrunk) J_n each step saw.
+        Returns ``(ranks, tails, factors, core, seconds, js, missed)``:
+        per-mode chosen ranks and fractional tails, the sketch's own
+        orthonormal factors, the shrunk core, per-step wall-clock, the
+        actual (shrunk) J_n each step saw, and the modes whose budget NO
+        grid candidate met even at the cap width — the error-target miss
+        that triggers the rand→eig ladder hop in :meth:`_execute_adaptive`.
         """
         import time as _time
 
@@ -833,10 +900,12 @@ class TuckerPlan:
         factors: dict[int, jax.Array] = {}
         seconds: list[float] = []
         js: list[int] = []
+        missed: list[int] = []
         platform = jax.default_backend()
         for s in self.schedule:
             wall0 = _time.time()
             t0 = _time.perf_counter()
+            _chaos.fire("sketch", mode=s.mode)
             js.append(int(y.size // y.shape[s.mode]))
             width_cap = min(s.i_n, s.rank_grid[-1] + cfg.oversample)
             width = min(width_cap, max(16, 2 * cfg.oversample,
@@ -866,6 +935,7 @@ class TuckerPlan:
                             # the largest grid rank the sketch can express
                 r = max(g for g in s.rank_grid if g <= width)
                 tail = max(energy - float(csum[r - 1]), 0.0)
+                missed.append(s.mode)
             chosen[s.mode], tails[s.mode] = int(r), tail / total
             # top-r Ritz rotation of the range basis; shrink via the
             # already-projected b — no second pass over the input
@@ -889,7 +959,7 @@ class TuckerPlan:
                                    predicted_s=s.predicted_s, actual_s=dt,
                                    source="execute")
         ranks = tuple(chosen[m] for m in range(len(self.shape)))
-        return ranks, tails, factors, y, seconds, js
+        return ranks, tails, factors, y, seconds, js, missed
 
     def _execute_adaptive(self, x: jax.Array, *,
                           record: bool = False) -> SthosvdResult:
@@ -906,15 +976,35 @@ class TuckerPlan:
         store."""
         cfg = self.config
         xa = jnp.asarray(x)
-        ranks, tails, factors, core, seconds, js = self._sketch_pass(xa)
+        ranks, tails, factors, core, seconds, js, missed = \
+            self._sketch_pass(xa)
         bound = math.sqrt(sum(tails.values()))
         m = cfg.methods
         sketch_only = m == "rand" or \
             (not isinstance(m, str) and all(q == "rand" for q in m))
+        hop_methods = None
+        if sketch_only and missed:
+            # rand→eig ladder hop: the sketch missed its per-mode budget at
+            # the cap width on these modes, so instead of shipping the
+            # under-converged sketch factors, refine deterministically at
+            # the chosen (cap) ranks.  The reported bound stays the
+            # measured sketch bound — honest about the miss (> target)
+            # rather than silently optimistic.
+            hop_methods = "eig"
+            sketch_only = False
+            _obs.event("fallback", hop="rand_to_eig",
+                       modes=[int(mm) for mm in missed],
+                       shape=list(self.shape), backend=self.backend)
+            _metrics.REGISTRY.counter(
+                "atucker_fallback_hops_total",
+                "execute-time fallback ladder hops, by rung").inc(
+                    hop="rand_to_eig", backend=self.backend)
         if not sketch_only:
             rcfg = replace(cfg, ranks=ranks, error_target=None,
                            rank_grid=None,
                            mode_order=tuple(s.mode for s in self.schedule))
+            if hop_methods is not None:
+                rcfg = replace(rcfg, methods=hop_methods)
             res = plan(self.shape, self.dtype, rcfg).execute(
                 xa, record=record, donate=False)
             for t in res.trace:
@@ -1272,6 +1362,109 @@ def _plan(shape: Sequence[int], dtype, config: TuckerConfig, *,
             "first; enable donation (donate_input=True or the default "
             "auto policy with host inputs) or raise the cap")
     return p
+
+
+# ---------------------------------------------------------------------------
+# Execute-time fallback ladder
+# ---------------------------------------------------------------------------
+
+def _replan_safe(p: "TuckerPlan", cfg: TuckerConfig) -> "TuckerPlan | None":
+    """Plan a ladder hop's degraded config, or None when the hop itself
+    cannot be planned (e.g. the tighter cap admits no schedule) — the
+    ladder then moves on / gives up rather than masking the original
+    failure with a planning error."""
+    try:
+        return plan(p.shape, p.dtype, cfg)
+    except Exception:
+        return None
+
+
+def _next_hop(p: "TuckerPlan", err: BaseException,
+              applied: list[str]) -> "tuple[str, TuckerPlan] | None":
+    """Pick the next ladder rung for a classified failure, or None when the
+    ladder is exhausted (each rung applies at most once, in a fixed order,
+    so the ladder is bounded and deterministic)."""
+    cfg = p.config
+    has_pallas = any(s.backend == "pallas" for s in p.schedule)
+
+    def to_matfree():
+        if has_pallas and "pallas_to_matfree" not in applied:
+            p2 = _replan_safe(p, replace(cfg, impl="matfree"))
+            if p2 is not None:
+                return "pallas_to_matfree", p2
+        return None
+
+    if isinstance(err, NumericalError):
+        if "als_to_eig" not in applied and \
+                any(s.method == "als" for s in p.schedule):
+            methods = tuple("eig" if m == "als" else m for m in p.methods)
+            p2 = _replan_safe(p, replace(cfg, methods=methods))
+            if p2 is not None:
+                return "als_to_eig", p2
+        return to_matfree()
+    if isinstance(err, ResourceError):
+        # rung 1 retries the SAME schedule with donation forced off (an
+        # aliased buffer is the usual marginal allocation); rung 2 replans
+        # the whole sweep under a tighter per-device cap
+        if "donate_off" not in applied:
+            return "donate_off", p
+        if "replan_cap" not in applied:
+            current = cfg.memory_cap_bytes or p.peak_bytes
+            cap = max(1, int(0.75 * current))
+            p2 = _replan_safe(p, replace(cfg, memory_cap_bytes=cap,
+                                         mode_order="opt"))
+            if p2 is not None:
+                return "replan_cap", p2
+        return None
+    # unclassified runtime failure: a kernel-backend swap is the only hop
+    # that can plausibly help (and the only one that is safe to try)
+    return to_matfree()
+
+
+def _emit_hop(p: "TuckerPlan", name: str, err: BaseException) -> None:
+    _obs.event("fallback", hop=name, error=type(err).__name__,
+               shape=list(p.shape), backend=p.backend)
+    _metrics.REGISTRY.counter(
+        "atucker_fallback_hops_total",
+        "execute-time fallback ladder hops, by rung").inc(
+            hop=name, backend=p.backend)
+
+
+def _run_with_fallback(p0: "TuckerPlan", can_retry, run,
+                       donate_override: bool | None) -> SthosvdResult:
+    """Drive ``run(plan, donate)`` through the fallback ladder: classify
+    each failure, degrade one rung at a time, re-raise the classified error
+    once no rung remains.  Input-side failures (bad input, deadline,
+    cancellation) never hop — retrying cannot fix the caller's data."""
+    p, donate_now = p0, donate_override
+    applied: list[str] = []
+    while True:
+        try:
+            return run(p, donate_now)
+        except Exception as e:  # noqa: BLE001 - classification is the point
+            if isinstance(e, (InputError, DeadlineError, CancelledError)):
+                raise
+            terr = classify_exception(e)
+            if not can_retry():
+                # the failed sweep consumed the donated input buffer and no
+                # original survives to re-materialize from — surface the
+                # classification instead of hopping onto a dead input
+                if terr is not None and terr is not e:
+                    raise terr from e
+                raise
+            hop = _next_hop(p, terr if terr is not None else e, applied)
+            if hop is None:
+                if terr is not None and terr is not e:
+                    raise terr from e
+                raise
+            name, p2 = hop
+            applied.append(name)
+            if name == "donate_off":
+                donate_now = False
+            _emit_hop(p, name, terr if terr is not None else e)
+            # the degraded plan records through the same tune/obs machinery
+            # as any other execute, so the flywheel learns the hop happened
+            p = p2
 
 
 def decompose(x: jax.Array, config: TuckerConfig, *,

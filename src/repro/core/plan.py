@@ -27,11 +27,13 @@ from typing import Callable, Sequence
 
 import jax
 
+from .. import chaos as _chaos
 from ..obs import drift as _drift
 from ..obs import trace as _obs
 from . import tensor_ops as T
 from .backend import get_backend
 from .cost_model import als_flops, eig_flops, rand_flops, svd_flops
+from .errors import NumericalError
 from .solvers import (ALS, DEFAULT_ALS_ITERS, DEFAULT_OVERSAMPLE,
                       DEFAULT_POWER_ITERS, RAND, SOLVERS)
 
@@ -625,12 +627,22 @@ def run_schedule(x: jax.Array, steps: Sequence[ModeStep], *,
     for step in steps:
         wall0 = time.time()
         t0 = time.perf_counter()
+        _chaos.fire("solve", mode=step.mode, method=step.method)
         res = solve_step(y if sequential else x, step,
                          als_iters=als_iters, oversample=oversample,
                          power_iters=power_iters, impl=impl)
+        if _chaos.active() and _chaos.poison("solve_out", mode=step.mode):
+            res = res._replace(u=res.u * float("nan"))
         if block_until_ready:
             jax.block_until_ready(res.y_new)
             dt = time.perf_counter() - t0
+            # a breakdown that slipped past the in-solver guards (e.g. a
+            # non-finite Gram) shows up here as NaN factors — surface it
+            # as a classified error naming the step, not as silent poison
+            if not bool(jax.numpy.all(jax.numpy.isfinite(res.u))):
+                raise NumericalError(
+                    f"{step.method} solve on mode {step.mode} produced a "
+                    "non-finite factor (numerical breakdown)")
             # the eager per-step path is the only place a mode solve has
             # real wall-clock: span it retroactively (no enter/exit to
             # leak on solver errors) and feed predicted-vs-actual drift

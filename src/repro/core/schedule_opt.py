@@ -91,6 +91,7 @@ from typing import Sequence
 
 from ..obs import trace as _obs
 from .cost_model import DEFAULT_COST_MODEL, CostModel
+from .errors import ResourceError
 from .solvers import DEFAULT_ALS_ITERS
 
 #: solvers the optimizer may choose between when methods are not pinned.
@@ -102,9 +103,11 @@ from .solvers import DEFAULT_ALS_ITERS
 SEARCH_METHODS = ("eig", "als")
 
 
-class MemoryCapError(ValueError):
+class MemoryCapError(ResourceError, ValueError):
     """No schedule satisfies ``memory_cap_bytes``; the message names the
-    binding step (mode, solver, problem size, modeled bytes)."""
+    binding step (mode, solver, problem size, modeled bytes).  Part of the
+    classified-failure taxonomy (a :class:`~repro.core.errors.ResourceError`)
+    while still a ``ValueError`` for pre-taxonomy call sites."""
 
 
 @dataclass(frozen=True)

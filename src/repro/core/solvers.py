@@ -109,13 +109,35 @@ def als_solve(y: jax.Array, mode: int, rank: int, *,
     return SolveResult(q.astype(y.dtype), y_new)
 
 
+#: escalating relative re-regularization ladder: the baseline 1e-12·tr(A)
+#: jitter first (bitwise-identical to the historical behaviour whenever it
+#: succeeds), then two stronger rungs for genuinely ill-conditioned Grams
+_SPD_JITTERS = (1e-12, 1e-8, 1e-4)
+
+
 def _spd_inverse(a: jax.Array) -> jax.Array:
     """Inverse of a small SPD matrix via Cholesky (paper uses explicit inverse;
-    Cholesky is the numerically robust equivalent at identical O(R³) cost)."""
+    Cholesky is the numerically robust equivalent at identical O(R³) cost).
+
+    Cholesky breakdown on a rank-deficient/ill-conditioned Gram (which XLA
+    reports as NaNs, not an exception) is detected in-jit and retried with
+    escalating jitter; the last rung adds an absolute floor so even an
+    exactly-zero Gram yields a finite (pseudo-)inverse instead of poisoning
+    the whole sweep.  Because selection is by ``jnp.where`` on the FIRST
+    finite factorization, well-posed solves keep their historical bitwise
+    results."""
     eye = jnp.eye(a.shape[0], dtype=a.dtype)
-    # jitter keeps early ALS iterations (random L) well-posed
-    c = jax.scipy.linalg.cho_factor(a + 1e-12 * jnp.trace(a) * eye)
-    return jax.scipy.linalg.cho_solve(c, eye)
+    scale = jnp.trace(a)
+    inv = jnp.full_like(a, jnp.nan)
+    for i, jitter in enumerate(_SPD_JITTERS):
+        reg = jitter * scale
+        if i == len(_SPD_JITTERS) - 1:
+            reg = reg + jnp.asarray(1e-6, a.dtype)   # absolute floor
+        c = jax.scipy.linalg.cho_factor(a + reg * eye)
+        cand = jax.scipy.linalg.cho_solve(c, eye)
+        ok = jnp.all(jnp.isfinite(inv))
+        inv = jnp.where(ok, inv, cand)
+    return inv
 
 
 # ---------------------------------------------------------------------------

@@ -81,6 +81,11 @@ class BucketMetrics:
     lanes_filled: int = 0        # lanes carrying a real request
     true_elems: int = 0          # sum of completed requests' true sizes
     slot_elems: int = 0          # sum of the slots they occupied
+    cancelled: int = 0           # removed from the queue before dispatch
+    deadline_expired: int = 0    # failed with DeadlineError (never ran)
+    retried: int = 0             # wave failures re-enqueued under a budget
+    quarantined: int = 0         # poisoned fused lanes re-derived alone
+    recovered: int = 0           # completed only after bisection/isolation
     backends: dict = field(default_factory=dict)
     solvers: dict = field(default_factory=dict)
     latency: LatencyWindow = field(default_factory=LatencyWindow)
@@ -126,6 +131,13 @@ class BucketMetrics:
             "backends": dict(self.backends), "solvers": dict(self.solvers),
             "latency": self.latency.snapshot_ms(),
             "queue_wait": self.queue_wait.snapshot_ms(),
+            "resilience": {
+                "cancelled": self.cancelled,
+                "deadline_expired": self.deadline_expired,
+                "retried": self.retried,
+                "quarantined": self.quarantined,
+                "recovered": self.recovered,
+            },
         }
 
 

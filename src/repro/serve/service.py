@@ -32,6 +32,32 @@ Every engine-level pin (``impl`` / ``mesh`` / ``memory_cap_bytes`` /
 donation) flows through unchanged; ``TuckerBatchEngine`` is now a thin
 synchronous wrapper over this service (identity bucket policy, unbounded
 waves).
+
+Failure isolation (see the repo README's "Resilience" section and
+``docs/ARCHITECTURE.md``):
+
+  * ``submit(..., validate="finite")`` (the default) rejects NaN/Inf
+    inputs at admission with :class:`~repro.core.errors.InputError`
+    naming the worst offending mode; ``deadline_s=`` bounds how long a
+    request may wait — expired requests fail with
+    :class:`~repro.core.errors.DeadlineError` at admission or pre-wave,
+    without ever occupying a lane.
+  * A failed fused wave is **bisected**: the wave re-runs in halves (at
+    the original wave's lane count, so every sub-wave reuses the same
+    compiled program and non-poisoned lanes stay bitwise-identical to a
+    clean wave) until the poisoned request is quarantined alone; a lane
+    that comes back non-finite is quarantined the same way.  The last
+    resort for a single request is an exact isolated run, whose failure
+    comes back *classified* (:func:`~repro.core.errors.coerce_exception`
+    guarantees no unclassified exception ever escapes through ``poll``).
+  * A per-bucket **circuit breaker** trips after ``breaker_threshold``
+    consecutive wave failures: the bucket degrades to exact item-by-item
+    execution, then half-opens after ``breaker_cooldown_s`` with a single
+    fused probe wave.  ``stats()["resilience"]`` and :meth:`health`
+    surface trips, states, and recovery counters.
+  * ``submit(..., retries=n)`` grants a per-request retry budget: wave-
+    level failures re-enqueue the job up to *n* times (input, deadline,
+    and cancellation failures never retry).
 """
 
 from __future__ import annotations
@@ -40,13 +66,18 @@ import math
 import sys
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 
+from .. import chaos as _chaos
 from ..core.api import CACHE_STATS, TuckerConfig, TuckerPlan, plan as make_plan
+from ..core.errors import (CancelledError, DeadlineError, InputError,
+                           NumericalError, ResourceError, check_finite,
+                           coerce_exception)
 from ..core.plan import validate_ranks
 from ..obs import drift as _drift
 from ..obs import trace as _obs
@@ -55,6 +86,11 @@ from .buckets import BucketPolicy, pad_block, pad_waste, slice_valid, trim_resul
 from .metrics import BucketMetrics, LatencyWindow, TraceWriter
 
 BACKPRESSURE_MODES = ("reject", "block")
+VALIDATE_MODES = ("finite", "none")
+
+#: errors that a retry budget never retries: the request itself is the
+#: problem (bad input), or the caller already gave up (deadline, cancel)
+_NO_RETRY = (InputError, DeadlineError, CancelledError)
 
 
 class RejectedError(RuntimeError):
@@ -71,12 +107,14 @@ class ServiceClosed(RuntimeError):
 class Ticket:
     """Handle returned by :meth:`TuckerService.submit`; pass to ``poll`` /
     ``wait``.  ``padded`` says the request did not fit its bucket exactly
-    (``bucket`` is the slot shape it was padded into)."""
+    (``bucket`` is the slot shape it was padded into); ``deadline_s`` is
+    the admission deadline the request carries (None = none)."""
     rid: int
     shape: tuple[int, ...]
     bucket: tuple[int, ...]
     padded: bool
     submitted_at: float
+    deadline_s: float | None = None
     _job: "_Job" = field(repr=False, default=None)
 
 
@@ -85,27 +123,103 @@ class _Job:
     job leaves the queue, so completed work is garbage-collected with its
     ticket)."""
     __slots__ = ("rid", "x", "config", "shape", "key", "t_submit",
-                 "result", "error", "event")
+                 "deadline", "retries_left", "result", "error", "event")
 
-    def __init__(self, rid, x, config, shape, key):
+    def __init__(self, rid, x, config, shape, key, *, deadline=None,
+                 retries=0):
         self.rid = rid
         self.x = x
         self.config = config
         self.shape = shape
         self.key = key
         self.t_submit = time.perf_counter()
+        self.deadline = deadline       # absolute perf_counter, or None
+        self.retries_left = retries
         self.result: SthosvdResult | None = None
         self.error: Exception | None = None
         self.event = threading.Event()
 
 
-class _BucketState:
-    __slots__ = ("key", "queue", "metrics")
+class _Breaker:
+    """Per-bucket circuit breaker over FUSED wave execution.
 
-    def __init__(self, key):
+    ``closed`` — waves run fused (the fast path).  After ``threshold``
+    consecutive wave failures the breaker opens: the bucket degrades to
+    exact item-by-item execution (``"isolated"``), trading throughput for
+    blast-radius-one.  After ``cooldown_s`` one wave is dispatched fused
+    as a probe (``half_open``); success re-closes the breaker, failure
+    re-opens it for another cooldown.
+
+    ``trips`` counts only closed→open transitions, so concurrent failure
+    reports cannot double-count a single trip.  Every transition happens
+    under the service lock.
+    """
+    __slots__ = ("threshold", "cooldown_s", "state", "consecutive",
+                 "opened_at", "probing", "trips", "reopens")
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.state = "closed"
+        self.consecutive = 0
+        self.opened_at = 0.0
+        self.probing = False
+        self.trips = 0
+        self.reopens = 0
+
+    def route(self, now: float) -> str:
+        """How the next wave should run: ``"fused"`` | ``"isolated"`` |
+        ``"probe"`` (fused, but its outcome decides reopen-vs-close).
+        Claims the probe slot, so only one probe is in flight at a time."""
+        if self.state == "closed":
+            return "fused"
+        if not self.probing and now - self.opened_at >= self.cooldown_s:
+            self.probing = True
+            self.state = "half_open"
+            return "probe"
+        return "isolated"
+
+    def on_result(self, ok: bool, now: float) -> bool:
+        """Outcome of a non-probe fused wave; True when this report TRIPPED
+        the breaker (closed→open) — the only transition that counts as a
+        trip, so a burst of concurrent failures trips exactly once."""
+        if ok:
+            self.consecutive = 0
+            return False
+        self.consecutive += 1
+        if self.state == "closed" and self.consecutive >= self.threshold:
+            self.state = "open"
+            self.opened_at = now
+            self.trips += 1
+            return True
+        return False
+
+    def on_probe(self, ok: bool, now: float) -> None:
+        """Outcome of the half-open probe wave."""
+        self.probing = False
+        if ok:
+            self.state = "closed"
+            self.consecutive = 0
+        else:
+            self.state = "open"
+            self.opened_at = now
+            self.reopens += 1
+
+    def snapshot(self) -> dict:
+        return {"state": self.state, "trips": self.trips,
+                "reopens": self.reopens,
+                "consecutive_failures": self.consecutive}
+
+
+class _BucketState:
+    __slots__ = ("key", "queue", "metrics", "breaker")
+
+    def __init__(self, key, breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 5.0):
         self.key = key
         self.queue: deque[_Job] = deque()
         self.metrics = BucketMetrics(bucket=key[0])
+        self.breaker = _Breaker(breaker_threshold, breaker_cooldown_s)
 
 
 class TuckerService:
@@ -127,6 +241,10 @@ class TuckerService:
     one-ahead pipeline the service always did, higher values deepen the
     window for streams of small waves.  Per-bucket ``pipeline_occupancy``
     in :meth:`stats` reports how often the window was actually used.
+
+    ``breaker_threshold`` / ``breaker_cooldown_s`` configure the per-bucket
+    circuit breaker (consecutive wave failures before fused execution is
+    suspended, and how long before a fused probe is attempted).
 
     Synchronous use (the engine wrapper, offline batches)::
 
@@ -150,6 +268,8 @@ class TuckerService:
                  max_queue: int | None = 1024,
                  backpressure: str = "reject",
                  max_inflight_waves: int = 2,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 5.0,
                  record: bool = False, record_store=None,
                  trace_path=None):
         if backpressure not in BACKPRESSURE_MODES:
@@ -160,6 +280,10 @@ class TuckerService:
         if max_inflight_waves < 1:
             raise ValueError("max_inflight_waves must be >= 1 (1 = serial "
                              "dispatch, 2 = classic one-ahead pipelining)")
+        if breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1")
+        if breaker_cooldown_s <= 0:
+            raise ValueError("breaker_cooldown_s must be > 0")
         self._selector = selector
         self._policy = policy if policy is not None else BucketPolicy()
         self._impl = "sharded" if impl is None and mesh is not None else impl
@@ -169,6 +293,8 @@ class TuckerService:
         self._max_queue = max_queue
         self._backpressure = backpressure
         self._max_inflight = int(max_inflight_waves)
+        self._breaker_threshold = int(breaker_threshold)
+        self._breaker_cooldown = float(breaker_cooldown_s)
         self._record = record
         self._record_store = record_store
         self._trace = TraceWriter(trace_path) if trace_path else None
@@ -180,13 +306,19 @@ class TuckerService:
         self._space = threading.Condition(self._lock)
         self._idle = threading.Condition(self._lock)
         self._pending = 0          # queued + in-flight, not yet completed
+        self._inflight_jobs: set[_Job] = set()
+        self._active_bucket: tuple | None = None
         self._next_rid = 0
         self._counters = {"submitted": 0, "requests": 0, "rejected": 0,
                           "failed": 0, "batches": 0, "plans_built": 0}
+        self._res = {"deadline_expired": 0, "cancelled": 0, "retried": 0,
+                     "bisections": 0, "quarantined": 0, "recovered": 0,
+                     "isolated_waves": 0, "probe_waves": 0}
         self._latency = LatencyWindow()
         self._t0 = time.perf_counter()
         self._thread: threading.Thread | None = None
         self._running = False
+        self._worker_failed = False
         self._closed = False
 
     # -- tracing -------------------------------------------------------------
@@ -248,19 +380,39 @@ class TuckerService:
         return p
 
     # -- admission -----------------------------------------------------------
-    def submit(self, x, config: TuckerConfig, *, rid: int | None = None) -> Ticket:
+    def submit(self, x, config: TuckerConfig, *, rid: int | None = None,
+               deadline_s: float | None = None, retries: int = 0,
+               validate: str | None = "finite") -> Ticket:
         """Admit one decomposition request; returns a :class:`Ticket`.
 
         Validation (ranks vs the TRUE shape) happens here so a bad request
-        fails its caller, not the wave that picks it up.  When the queue is
-        at ``max_queue``: ``backpressure="reject"`` raises
-        :class:`RejectedError` immediately; ``"block"`` waits for space —
-        against the background worker when running, otherwise by pumping a
-        wave inline (synchronous callers backpressure themselves by doing
-        the work).
+        fails its caller, not the wave that picks it up.
+        ``validate="finite"`` (the default) additionally rejects NaN/Inf
+        inputs at admission with :class:`~repro.core.errors.InputError`
+        naming the worst offending mode; pass ``validate="none"`` to skip
+        the check on trusted traffic.  ``deadline_s`` bounds the request's
+        total time in the service: a request still queued when its deadline
+        passes fails with :class:`~repro.core.errors.DeadlineError` instead
+        of occupying a lane.  ``retries`` is a per-request budget of wave-
+        level retry attempts (input/deadline/cancel failures never retry).
+
+        When the queue is at ``max_queue``: ``backpressure="reject"``
+        raises :class:`RejectedError` immediately; ``"block"`` waits for
+        space — against the background worker when running, otherwise by
+        pumping a wave inline (synchronous callers backpressure themselves
+        by doing the work).
         """
         if self._closed:
             raise ServiceClosed("service is closed to new submissions")
+        if validate is None:
+            validate = "none"
+        if validate not in VALIDATE_MODES:
+            raise ValueError(f"validate {validate!r} not in {VALIDATE_MODES}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 (or None)")
+        if retries < 0:
+            raise ValueError("retries must be >= 0")
+        t_adm = time.perf_counter()
         if not hasattr(x, "shape"):
             x = jnp.asarray(x)
         shape = tuple(int(s) for s in x.shape)
@@ -269,22 +421,27 @@ class TuckerService:
         # rank-adaptive configs (error_target, ranks=None) have no ranks to
         # validate here: per-mode ranks resolve per input at execute time,
         # and the config's own __post_init__ already validated the target
+        if validate == "finite":
+            check_finite(x, name="request input")
         pinned = self._pinned(config)
         dtype = str(jnp.dtype(x.dtype))
         bshape = self._policy.bucket_shape(shape)
         key = (bshape, dtype, pinned)
+        deadline = t_adm + deadline_s if deadline_s is not None else None
         while True:
             with self._lock:
                 if self._closed:
                     raise ServiceClosed("service is closed to new submissions")
                 bs = self._buckets.get(key)
                 if bs is None:
-                    bs = self._buckets[key] = _BucketState(key)
+                    bs = self._buckets[key] = _BucketState(
+                        key, self._breaker_threshold, self._breaker_cooldown)
                 if self._max_queue is None or self._pending < self._max_queue:
                     if rid is None:
                         rid = self._next_rid
                     self._next_rid = max(self._next_rid, rid) + 1
-                    job = _Job(rid, x, pinned, shape, key)
+                    job = _Job(rid, x, pinned, shape, key,
+                               deadline=deadline, retries=retries)
                     bs.queue.append(job)
                     bs.metrics.submitted += 1
                     self._pending += 1
@@ -299,6 +456,12 @@ class TuckerService:
                     raise RejectedError(
                         f"admission queue full ({self._max_queue} pending); "
                         "retry later or use backpressure='block'")
+                if deadline is not None and time.perf_counter() >= deadline:
+                    bs.metrics.rejected += 1
+                    self._counters["rejected"] += 1
+                    raise DeadlineError(
+                        f"request missed its {deadline_s}s deadline while "
+                        "blocked on admission (queue full)")
                 if self._running:
                     self._space.wait(timeout=0.1)
                     continue
@@ -311,7 +474,7 @@ class TuckerService:
                    bucket=list(bshape), padded=shape != bshape)
         return Ticket(rid=job.rid, shape=shape, bucket=bshape,
                       padded=shape != bshape, submitted_at=time.time(),
-                      _job=job)
+                      deadline_s=deadline_s, _job=job)
 
     # -- retrieval -----------------------------------------------------------
     def poll(self, ticket: Ticket) -> SthosvdResult | None:
@@ -333,6 +496,33 @@ class TuckerService:
                                f"{timeout}s")
         return self.poll(ticket)
 
+    def cancel(self, ticket: Ticket) -> bool:
+        """Cancel a not-yet-dispatched request.  Returns True when the
+        request was removed from its queue: its waiters unblock and
+        ``poll``/``wait`` raise :class:`~repro.core.errors.CancelledError`.
+        Returns False when the request already dispatched or completed —
+        in-flight work is never interrupted (lanes are fused; killing one
+        would kill its wave-mates)."""
+        job = ticket._job
+        with self._lock:
+            bs = self._buckets.get(job.key)
+            if bs is None or job not in bs.queue:
+                return False
+            bs.queue.remove(job)
+            job.result = None
+            job.error = CancelledError(
+                f"request {job.rid} was cancelled before dispatch")
+            self._pending -= 1
+            self._counters["failed"] += 1
+            bs.metrics.failed += 1
+            bs.metrics.cancelled += 1
+            self._res["cancelled"] += 1
+            job.event.set()
+            self._space.notify_all()
+            self._idle.notify_all()
+        self._emit("cancel", rid=job.rid, bucket=list(job.key[0]))
+        return True
+
     @property
     def pending(self) -> int:
         """Requests admitted but not yet completed (queued + in flight)."""
@@ -350,7 +540,22 @@ class TuckerService:
             bs = min(ready, key=lambda b: b.queue[0].t_submit)
             k = len(bs.queue) if self._policy.wave_slots is None \
                 else min(len(bs.queue), self._policy.wave_slots)
-            return bs, [bs.queue.popleft() for _ in range(k)]
+            jobs = [bs.queue.popleft() for _ in range(k)]
+            self._inflight_jobs.update(jobs)
+            return bs, jobs
+
+    def _job_block(self, j: _Job, bshape):
+        """One lane's input block (padded up to the bucket when needed),
+        with the per-job chaos seams: ``wave_job`` fires (raise/oom/slow)
+        and a due ``wave_job_data`` nan-rule poisons this lane's data —
+        the synthetic "one bad request inside a fused wave"."""
+        _chaos.fire("wave_job", rid=j.rid)
+        xb = jnp.asarray(j.x)
+        if j.shape != bshape:
+            xb = pad_block(xb, bshape)
+        if _chaos.active() and _chaos.poison("wave_job_data", rid=j.rid):
+            xb = xb * float("nan")
+        return xb
 
     def _dispatch_wave(self, bs: _BucketState, jobs: list[_Job],
                        inflight: int = 0):
@@ -360,45 +565,87 @@ class TuckerService:
         ``max_inflight_waves`` dispatched-but-unfinished waves, so host-side
         stacking and padding overlap device execution; ``inflight`` is how
         many earlier waves were still in flight at this dispatch (recorded
-        as pipeline occupancy)."""
+        as pipeline occupancy).
+
+        ``finish()`` is also where failure isolation lives: jobs whose
+        results never materialized (wave exception, async device failure,
+        or a non-finite fused lane) are recovered — fused groups by
+        bisection at the original lane count, everything else by an exact
+        isolated re-run — and whatever still fails comes back as a
+        *classified* error."""
         bshape, dtype, cfg = bs.key
         t_start = time.perf_counter()
         done: list[tuple[_Job, SthosvdResult | None, TuckerPlan | None,
                          Exception | None]] = []
-        lanes = len(jobs)
+        # pre-wave deadline sweep: expired requests fail here, before the
+        # wave is stacked, so they never occupy a lane
+        live: list[_Job] = []
+        for j in jobs:
+            if j.deadline is not None and t_start >= j.deadline:
+                done.append((j, None, None, DeadlineError(
+                    f"request {j.rid} missed its deadline before dispatch "
+                    f"(queued {t_start - j.t_submit:.3f}s)")))
+            else:
+                live.append(j)
+        lanes = len(live)
+        fused_group: list[_Job] = []   # jobs sharing ONE stacked dispatch
+        fused_lanes: int | None = None
+        wave_exc: Exception | None = None
         tune = sys.modules.get("repro.tune")
         record = self._record or (
             tune is not None and tune.active_sink() is not None)
+        with self._lock:
+            self._active_bucket = bs.key
+            route = bs.breaker.route(t_start) if (live and not record) \
+                else "fused"
+            if route == "isolated":
+                self._res["isolated_waves"] += 1
+            elif route == "probe":
+                self._res["probe_waves"] += 1
         try:
-            if record:
-                for j in jobs:
+            if not live:
+                pass
+            elif record:
+                for j in live:
                     done.append(self._run_recorded(j, bshape, dtype, cfg))
+            elif route == "isolated":
+                # breaker open: exact item-by-item execution at each
+                # request's true shape — no fused wave left to poison
+                for j in live:
+                    done.append(self._run_isolated(j, bs))
             elif self._policy.pad_mode == "mask" and \
-                    any(j.shape != bshape for j in jobs):
+                    any(j.shape != bshape for j in live):
                 # mask mode: mixed true shapes fuse into ONE vmapped wave at
                 # the bucket shape; zero slack is arithmetically inert and
                 # the factors' slack rows come back exactly zero, so each
                 # lane trims to its true shape afterwards
                 p = self._plan_cached(bshape, dtype, cfg)
-                stack = jnp.stack([pad_block(jnp.asarray(j.x), bshape)
-                                   for j in jobs])
-                stack, lanes = self._lane_fill(stack, len(jobs), p)
-                results = p.execute_batch(stack, donate=True)[:len(jobs)]
-                for j, r in zip(jobs, results):
+                _chaos.fire("wave", bucket=bshape, n=len(live))
+                fused_group = list(live)
+                stack = jnp.stack([self._job_block(j, bshape) for j in live])
+                stack, lanes = self._lane_fill(stack, len(live), p)
+                fused_lanes = lanes
+                results = p.execute_batch(stack, donate=True)[:len(live)]
+                for j, r in zip(live, results):
                     r = trim_result(r, j.shape) if j.shape != bshape else r
                     done.append((j, r, p, None))
             else:
-                exact = [j for j in jobs if j.shape == bshape]
-                padded = [j for j in jobs if j.shape != bshape]
+                exact = [j for j in live if j.shape == bshape]
+                padded = [j for j in live if j.shape != bshape]
                 if exact:
                     p = self._plan_cached(bshape, dtype, cfg)
+                    _chaos.fire("wave", bucket=bshape, n=len(exact))
                     if len(exact) == 1 and self._policy.lanes_for(1) == 1:
                         # singleton: share the unbatched compiled sweep
+                        _chaos.fire("wave_job", rid=exact[0].rid)
                         res = p.execute(jnp.asarray(exact[0].x))
                         done.append((exact[0], res, p, None))
                     else:
-                        stack = jnp.stack([jnp.asarray(j.x) for j in exact])
+                        fused_group = list(exact)
+                        stack = jnp.stack([self._job_block(j, bshape)
+                                           for j in exact])
                         stack, lanes_e = self._lane_fill(stack, len(exact), p)
+                        fused_lanes = lanes_e
                         lanes = lanes_e + len(padded)
                         results = p.execute_batch(stack, donate=True)
                         for j, r in zip(exact, results):
@@ -415,35 +662,120 @@ class TuckerService:
                     slots = jnp.stack([pad_block(jnp.asarray(j.x), bshape)
                                        for j in padded])
                     for i, j in enumerate(padded):
+                        _chaos.fire("wave_job", rid=j.rid)
                         tp = self._plan_cached(j.shape, dtype, cfg, base=base)
                         res = tp.execute(slice_valid(slots[i], j.shape),
                                          donate=True)
                         done.append((j, res, tp, None))
-        except Exception as e:  # noqa: BLE001 - fail the wave's jobs, not the pump
-            finished = {id(j) for j, *_ in done}
-            for j in jobs:
-                if id(j) not in finished:
-                    done.append((j, None, None, e))
+        except Exception as e:  # noqa: BLE001 - recovered in finish(), not here
+            wave_exc = e
 
         def finish():
-            for _, res, _, _ in done:
-                if res is not None:
+            # 1) collect what needs recovery: jobs the wave never produced a
+            #    result for, async device failures, and poisoned fused lanes
+            fused_ids = {id(j) for j in fused_group}
+            recover: list[_Job] = []
+            if wave_exc is not None:
+                executed = {id(j) for j, *_ in done}
+                recover.extend(j for j in live if id(j) not in executed)
+            final: list = []
+            quarantined = 0
+            for j, res, p, err in done:
+                if res is None:
+                    final.append((j, res, p, err))
+                    continue
+                try:
                     jax.block_until_ready(res.tucker.core)
+                except Exception:  # noqa: BLE001 - async failure -> recovery
+                    recover.append(j)
+                    continue
+                if id(j) in fused_ids and not bool(
+                        jnp.all(jnp.isfinite(res.tucker.core))):
+                    # poisoned lane quarantine: re-derive THIS lane alone;
+                    # every other lane keeps its fused result untouched
+                    quarantined += 1
+                    recover.append(j)
+                    continue
+                final.append((j, res, p, err))
+            wave_ok = not recover
+            if quarantined:
+                with self._lock:
+                    self._res["quarantined"] += quarantined
+            # 2) recover: fused members by bisection at the original lane
+            #    count (same compiled program -> clean lanes stay bitwise-
+            #    identical), the rest by one exact isolated re-run
+            recovered_ids = {id(j) for j in recover}
+            if recover:
+                fused_rec = [j for j in recover if id(j) in fused_ids]
+                other_rec = [j for j in recover if id(j) not in fused_ids]
+                if fused_rec:
+                    hint = fused_lanes if fused_lanes is not None \
+                        else self._policy.lanes_for(len(fused_group))
+                    final.extend(self._bisect(bs, fused_rec, hint))
+                for j in other_rec:
+                    final.append(self._run_isolated(j, bs))
+            # 3) breaker bookkeeping (fused waves only; recorded and
+            #    already-isolated waves say nothing about the fused path)
+            breaker_events = []
+            if live and not record:
+                with self._lock:
+                    if route == "probe":
+                        was = bs.breaker.state
+                        bs.breaker.on_probe(wave_ok, time.perf_counter())
+                        if wave_ok and was != "closed":
+                            breaker_events.append(
+                                ("breaker_close", {"bucket": list(bshape)}))
+                    elif route == "fused":
+                        if bs.breaker.on_result(wave_ok,
+                                                time.perf_counter()):
+                            breaker_events.append(
+                                ("breaker_open",
+                                 {"bucket": list(bshape),
+                                  "after_failures": bs.breaker.consecutive}))
+            # 4) retry budget: requeue retryable failures instead of
+            #    completing them (bad-input / deadline / cancel never retry)
+            requeue: list[_Job] = []
+            completed: list = []
+            for entry in final:
+                j, res, p, err = entry
+                if (err is not None and j.retries_left > 0
+                        and not isinstance(err, _NO_RETRY)):
+                    j.retries_left -= 1
+                    requeue.append(j)
+                else:
+                    completed.append(entry)
             t_done = time.perf_counter()
             events = []
             with self._lock:
+                self._inflight_jobs.difference_update(jobs)
                 m = bs.metrics
                 m.waves += 1
                 m.pipelined_waves += inflight > 0
                 m.inflight_sum += inflight
                 m.lanes += lanes
-                m.lanes_filled += len(jobs)
+                m.lanes_filled += len(live)
+                m.quarantined += quarantined
                 self._counters["batches"] += 1
-                for j, res, p, err in done:
+                for j in requeue:
+                    bs.queue.append(j)
+                    m.retried += 1
+                    self._res["retried"] += 1
+                    events.append(("retry", {"rid": j.rid,
+                                             "left": j.retries_left}))
+                if requeue:
+                    self._work.notify_all()
+                for j, res, p, err in completed:
+                    if j.event.is_set():
+                        # already finalized elsewhere (cancelled while
+                        # queued for retry, or abandoned by a force-stop)
+                        continue
                     j.result, j.error = res, err
                     if err is not None:
                         m.failed += 1
                         self._counters["failed"] += 1
+                        if isinstance(err, DeadlineError):
+                            m.deadline_expired += 1
+                            self._res["deadline_expired"] += 1
                         events.append(("error", {"rid": j.rid,
                                                  "error": repr(err)}))
                     else:
@@ -457,6 +789,9 @@ class TuckerService:
                         m.backends[p.backend] = m.backends.get(p.backend, 0) + 1
                         for meth in p.methods:
                             m.solvers[meth] = m.solvers.get(meth, 0) + 1
+                        if id(j) in recovered_ids:
+                            m.recovered += 1
+                            self._res["recovered"] += 1
                         self._counters["requests"] += 1
                         self._latency.add(lat)
                         events.append(("done", {
@@ -466,12 +801,16 @@ class TuckerService:
                             "pad_waste": round(pad_waste(j.shape, bshape), 6)}))
                     self._pending -= 1
                     j.event.set()
+                if self._active_bucket == bs.key:
+                    self._active_bucket = None
                 self._space.notify_all()
                 self._idle.notify_all()
             self._emit("wave", bucket=list(bshape),
-                       lanes=lanes, filled=len(jobs),
-                       pad_mode=self._policy.pad_mode,
+                       lanes=lanes, filled=len(live),
+                       pad_mode=self._policy.pad_mode, route=route,
                        wall_s=round(t_done - t_start, 6))
+            for kind, fields in breaker_events:
+                self._emit(kind, **fields)
             for kind, fields in events:
                 self._emit(kind, **fields)
             if not record:
@@ -481,9 +820,73 @@ class TuckerService:
                 # completed jobs and attribute each job's share across its
                 # plan's steps proportionally to their predictions — the
                 # serve-traffic view of predicted-vs-actual calibration
-                self._observe_wave_drift(done, t_done - t_start)
+                self._observe_wave_drift(completed, t_done - t_start)
 
         return finish
+
+    # -- failure recovery ----------------------------------------------------
+    def _fused_sync(self, bs: _BucketState, group: list[_Job],
+                    lanes_hint: int) -> list:
+        """Re-run ``group`` as one fused wave padded to ``lanes_hint`` lanes
+        — the ORIGINAL wave's lane count, so the sub-wave reuses the same
+        compiled program and every lane's result is bitwise-identical to
+        the one a clean wave would have produced.  Blocks on the results
+        and raises if any lane fails or comes back non-finite (the bisect
+        driver then halves the group)."""
+        bshape, dtype, cfg = bs.key
+        p = self._plan_cached(bshape, dtype, cfg)
+        stack = jnp.stack([self._job_block(j, bshape) for j in group])
+        if lanes_hint > len(group) and p.backend != "sharded":
+            fill = jnp.zeros((lanes_hint - len(group), *stack.shape[1:]),
+                             stack.dtype)
+            stack = jnp.concatenate([stack, fill])
+        results = p.execute_batch(stack, donate=True)[:len(group)]
+        out = []
+        for j, r in zip(group, results):
+            jax.block_until_ready(r.tucker.core)
+            if not bool(jnp.all(jnp.isfinite(r.tucker.core))):
+                raise NumericalError(
+                    f"request {j.rid}: fused lane produced a non-finite "
+                    "core (poisoned wave member)")
+            rr = trim_result(r, j.shape) if j.shape != bshape else r
+            out.append((j, rr, p, None))
+        return out
+
+    def _bisect(self, bs: _BucketState, group: list[_Job],
+                lanes_hint: int) -> list:
+        """Wave bisection: retry the failed group fused; on failure halve
+        it and recurse, so a single poisoned request is quarantined alone
+        while its wave-mates complete.  The singleton base case falls back
+        to an exact isolated run, whose failure comes back classified."""
+        if not group:
+            return []
+        try:
+            return self._fused_sync(bs, group, lanes_hint)
+        except Exception:  # noqa: BLE001 - halve and isolate
+            if len(group) == 1:
+                return [self._run_isolated(group[0], bs)]
+            with self._lock:
+                self._res["bisections"] += 1
+            self._emit("bisect", bucket=list(bs.key[0]), n=len(group))
+            mid = len(group) // 2
+            return (self._bisect(bs, group[:mid], lanes_hint)
+                    + self._bisect(bs, group[mid:], lanes_hint))
+
+    def _run_isolated(self, j: _Job, bs: _BucketState):
+        """Exact single-request execution at the request's TRUE shape — the
+        breaker-open path and the last resort for a quarantined request.
+        Runs under ``validate="finite"`` so a poisoned result is caught
+        (and the plan's own fallback ladder gets a chance to recover it);
+        failures come back classified, never raw."""
+        bshape, dtype, cfg = bs.key
+        try:
+            _chaos.fire("wave_job", rid=j.rid)
+            base = self._plans.get((bshape, dtype, cfg))
+            tp = self._plan_cached(j.shape, dtype, cfg, base=base)
+            res = tp.execute(jnp.asarray(j.x), validate="finite")
+            return (j, res, tp, None)
+        except Exception as e:  # noqa: BLE001 - per-job failure isolation
+            return (j, None, None, coerce_exception(e))
 
     @staticmethod
     def _observe_wave_drift(done, wall_s: float) -> None:
@@ -536,7 +939,7 @@ class TuckerService:
                     als_iters=cfg.als_iters)
             return (j, out, p, None)
         except Exception as e:  # noqa: BLE001 - per-job failure isolation
-            return (j, None, None, e)
+            return (j, None, None, coerce_exception(e))
 
     # -- pumping -------------------------------------------------------------
     def _pump_once(self) -> bool:
@@ -561,6 +964,11 @@ class TuckerService:
         while True:
             wave = self._take_wave()
             if wave is None:
+                if inflight:
+                    # retried jobs may have re-entered the queue from a
+                    # finish(); complete in-flight waves, then re-check
+                    inflight.popleft()()
+                    continue
                 break
             inflight.append(self._dispatch_wave(*wave,
                                                 inflight=len(inflight)))
@@ -582,16 +990,61 @@ class TuckerService:
         self._thread.start()
         return self
 
-    def stop(self, drain: bool = True) -> None:
-        """Stop the worker (optionally draining the queue first)."""
-        if self._running and drain:
+    def stop(self, drain: bool = True, *, force: bool = False,
+             join_timeout: float = 30.0) -> None:
+        """Stop the worker.  ``drain=True`` (default) completes the queue
+        first; ``force=True`` abandons queued AND in-flight work instead —
+        every unfinished job fails with a classified
+        :class:`~repro.core.errors.ResourceError` and its waiters unblock
+        immediately.  If the worker thread does not join within
+        ``join_timeout`` seconds (a wedged wave), a ``RuntimeWarning``
+        names the bucket it was last dispatching instead of returning
+        silently; the daemonic thread is then abandoned."""
+        if self._running and drain and not force:
             self.drain()
         with self._lock:
             self._running = False
+            if force:
+                self._abandon_unfinished_locked(
+                    "service stopped with force=True; request was "
+                    "abandoned before completing")
             self._work.notify_all()
         if self._thread is not None:
-            self._thread.join(timeout=30)
+            self._thread.join(timeout=join_timeout)
+            if self._thread.is_alive():
+                with self._lock:
+                    stuck = self._active_bucket
+                where = ("bucket " + "x".join(str(s) for s in stuck[0])
+                         if stuck else "an unknown bucket")
+                warnings.warn(
+                    f"service worker did not stop within {join_timeout}s; "
+                    f"it was last dispatching {where} — abandoning the "
+                    "daemonic worker thread (use stop(force=True) to fail "
+                    "its jobs immediately)", RuntimeWarning, stacklevel=2)
             self._thread = None
+
+    def _abandon_unfinished_locked(self, reason: str) -> None:
+        """Fail every queued and in-flight job with a ResourceError (caller
+        holds the lock).  The finish() of a still-running wave skips jobs
+        whose event is already set, so nothing is completed twice."""
+        err = ResourceError(reason)
+        stranded: list[_Job] = []
+        for bs in self._buckets.values():
+            while bs.queue:
+                stranded.append(bs.queue.popleft())
+        stranded.extend(j for j in self._inflight_jobs
+                        if not j.event.is_set())
+        self._inflight_jobs.clear()
+        for j in stranded:
+            if j.event.is_set():
+                continue
+            j.result, j.error = None, err
+            self._pending -= 1
+            self._counters["failed"] += 1
+            self._buckets[j.key].metrics.failed += 1
+            j.event.set()
+        self._idle.notify_all()
+        self._space.notify_all()
 
     def close(self) -> None:
         """Refuse new submissions, drain what's queued, stop the worker,
@@ -613,8 +1066,11 @@ class TuckerService:
 
     def _pump(self) -> None:
         inflight: deque = deque()
+        died: Exception | None = None
         try:
             while True:
+                if _chaos.active():
+                    _chaos.fire("worker")
                 wave = self._take_wave()
                 if wave is None:
                     if inflight:
@@ -630,6 +1086,8 @@ class TuckerService:
                                                     inflight=len(inflight)))
                 while len(inflight) >= self._max_inflight:
                     inflight.popleft()()
+        except Exception as e:  # noqa: BLE001 - a dying pump must fail its jobs
+            died = e
         finally:
             while inflight:
                 inflight.popleft()()
@@ -637,16 +1095,11 @@ class TuckerService:
             with self._lock:
                 if self._running:   # left the loop on an unexpected error
                     self._running = False
-                    err = RuntimeError("service worker died; request was "
-                                       "never executed")
-                    for bs in self._buckets.values():
-                        while bs.queue:
-                            j = bs.queue.popleft()
-                            j.error = err
-                            self._pending -= 1
-                            self._counters["failed"] += 1
-                            bs.metrics.failed += 1
-                            j.event.set()
+                    self._worker_failed = True
+                    reason = "service worker died; request was never executed"
+                    if died is not None:
+                        reason += f" (worker failure: {died!r})"
+                    self._abandon_unfinished_locked(reason)
                 self._idle.notify_all()
                 self._space.notify_all()
 
@@ -664,20 +1117,52 @@ class TuckerService:
         taken.add(label)
         return label
 
+    def health(self) -> dict:
+        """Liveness/readiness probe: ``"ok"`` | ``"degraded"`` (some
+        bucket's breaker is not closed — fused serving suspended there) |
+        ``"unhealthy"`` (the worker died unexpectedly).  Cheap: counters
+        only, never touches the device."""
+        with self._lock:
+            taken: set = set()
+            open_buckets = [self._bucket_label(bs.key, taken)
+                            for bs in self._buckets.values()
+                            if bs.breaker.state != "closed"]
+            if self._worker_failed:
+                status = "unhealthy"
+            elif open_buckets:
+                status = "degraded"
+            else:
+                status = "ok"
+            return {
+                "status": status,
+                "worker": ("failed" if self._worker_failed else
+                           "running" if self._running else "stopped"),
+                "pending": self._pending,
+                "breakers_open": open_buckets,
+            }
+
     def stats(self) -> dict:
         """Operator snapshot: global counters + per-bucket observability
         (p50/p95/p99 latency ms, queue depth, pad-waste, occupancy,
         backend/solver counts).  ``requests``/``batches``/``plans_built``/
-        ``backends`` keep the batch engine's historical meanings."""
+        ``backends`` keep the batch engine's historical meanings;
+        ``resilience`` aggregates the failure-isolation machinery
+        (deadlines, cancels, retries, bisections, quarantines, breaker
+        trips) and each bucket snapshot carries its breaker state."""
         with self._lock:
             taken: set = set()
             buckets = {}
             backends: dict = {}
             solvers: dict = {}
             true_elems = slot_elems = 0
+            trips = reopens = open_count = 0
             for key, bs in self._buckets.items():
-                buckets[self._bucket_label(key, taken)] = \
-                    bs.metrics.snapshot(queue_depth=len(bs.queue))
+                snap = bs.metrics.snapshot(queue_depth=len(bs.queue))
+                snap["breaker"] = bs.breaker.snapshot()
+                buckets[self._bucket_label(key, taken)] = snap
+                trips += bs.breaker.trips
+                reopens += bs.breaker.reopens
+                open_count += bs.breaker.state != "closed"
                 for k, v in bs.metrics.backends.items():
                     backends[k] = backends.get(k, 0) + v
                 for k, v in bs.metrics.solvers.items():
@@ -698,6 +1183,12 @@ class TuckerService:
                                   if elapsed > 0 else 0.0,
                 "latency": self._latency.snapshot_ms(),
                 "buckets": buckets,
+                "resilience": {
+                    **self._res,
+                    "breaker_trips": trips,
+                    "breaker_reopens": reopens,
+                    "breakers_open": open_count,
+                },
                 # process-wide observability riding the operator snapshot:
                 # compile-cache behaviour and predicted-vs-actual drift
                 # (stale cells name the repro.tune rerun that repairs them)
